@@ -1,0 +1,43 @@
+"""Shared helpers for the benchmark harnesses.
+
+All paper-table benchmarks run on synthetic data (offline container) at a
+CPU-scale configuration (16x16 images, 0.25-width ResNet backbone, tens of
+rounds).  The claims validated are DIRECTIONAL (orderings and dynamics),
+not the paper's absolute accuracy numbers — see DESIGN.md §1.
+
+``FAST`` mode (env REPRO_BENCH_FAST=1, default on) shrinks rounds/devices so
+``python -m benchmarks.run`` finishes on a single CPU core; set
+REPRO_BENCH_FAST=0 for the paper-scale overnight runs.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def bench_params():
+    if FAST:
+        return dict(n_devices=10, n_rounds=20, n_train=1200, local_epochs=2,
+                    participation=0.4, energy_scale=0.08)
+    return dict(n_devices=40, n_rounds=120, n_train=6000, local_epochs=5,
+                participation=0.1, energy_scale=0.6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """CSV contract used by benchmarks.run: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+    @property
+    def us(self):
+        return (time.time() - self.t0) * 1e6

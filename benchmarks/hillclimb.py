@@ -1,0 +1,65 @@
+"""§Perf hillclimb driver: run one (arch × shape) under a named config
+variant, print the three roofline terms + memory, and append to
+perf_iterations.json for the EXPERIMENTS.md §Perf log.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch yi-34b \
+        --shape train_4k --variant repeat_kv --set repeat_kv=1
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+LOG = os.path.join(os.path.dirname(__file__), "..", "perf_iterations.json")
+
+
+def run_variant(arch, shape, variant, flags, mesh="single", step="default"):
+    out = f"/tmp/hc_{arch}_{shape}_{variant}.json".replace("/", "_")
+    out = "/tmp/" + out.lstrip("_tmp_")
+    args = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+            "--shape", shape, "--mesh", mesh, "--step", step,
+            "--json", out] + flags
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(args, capture_output=True, text=True, env=env,
+                       timeout=3600)
+    if r.returncode != 0:
+        print(r.stdout[-3000:], r.stderr[-3000:])
+        raise SystemExit(1)
+    res = json.load(open(out))[0]
+    rf = res["roofline"]
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant, "mesh": mesh,
+        "step": step, "flags": flags,
+        "t_compute_s": rf["t_compute_s"], "t_memory_s": rf["t_memory_s"],
+        "t_collective_s": rf["t_collective_s"], "dominant": rf["dominant"],
+        "t_bound_s": rf["t_bound_s"],
+        "hbm_gib": res["memory"]["total_hbm_bytes"] / 2**30,
+        "useful": rf.get("useful_flops_ratio", 0.0),
+        "collectives": rf["collectives"],
+    }
+    hist = json.load(open(LOG)) if os.path.exists(LOG) else []
+    hist.append(rec)
+    json.dump(hist, open(LOG, "w"), indent=2)
+    print(f"[{variant}] dom={rec['dominant']} bound={rec['t_bound_s']:.3g}s "
+          f"comp={rec['t_compute_s']:.3g} mem={rec['t_memory_s']:.3g} "
+          f"coll={rec['t_collective_s']:.3g} hbm={rec['hbm_gib']:.1f}GiB "
+          f"useful={rec['useful']:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--step", default="default")
+    ap.add_argument("flags", nargs="*", default=[])
+    a = ap.parse_args()
+    run_variant(a.arch, a.shape, a.variant, a.flags, a.mesh, a.step)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline report over the dry-run results (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_results.json (produced by ``python -m repro.launch.dryrun --all
+--mesh both --json dryrun_results.json``) and prints the per-(arch x shape)
+three-term roofline table with the dominant bottleneck and the
+MODEL_FLOPS / HLO_FLOPs usefulness ratio.  Single-pod rows only, per the
+harness contract (the multi-pod rows prove the pod axis shards)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+
+def main(path=None):
+    path = path or os.path.join(os.path.dirname(__file__), "..",
+                                "dryrun_results.json")
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0,
+             f"no {os.path.basename(path)} — run python -m repro.launch.dryrun --all --mesh both")
+        return []
+    rows = json.load(open(path))
+    table = []
+    for r in rows:
+        if not r.get("ok") or r.get("mesh") != "single":
+            continue
+        rf = r["roofline"]
+        table.append(r)
+        emit(f"roofline/{r['arch']}/{r['shape']}", rf["t_bound_s"] * 1e6,
+             f"dominant={rf['dominant']};t_comp={rf['t_compute_s']:.4g}"
+             f";t_mem={rf['t_memory_s']:.4g};t_coll={rf['t_collective_s']:.4g}"
+             f";useful_ratio={rf.get('useful_flops_ratio', 0):.3f}"
+             f";hbm_GiB={r['memory']['total_hbm_bytes'] / 2**30:.2f}")
+    ok_multi = sum(1 for r in rows if r.get("ok") and r.get("mesh") == "multi")
+    emit("roofline/summary", 0.0,
+         f"single_pod_ok={len(table)};multi_pod_ok={ok_multi};total={len(rows)}")
+    return table
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,4 @@
+"""repro: production-grade JAX reproduction of DR-FL (energy-aware FL via
+MARL dual-selection) plus a multi-arch, multi-pod distributed runtime."""
+
+__version__ = "0.1.0"

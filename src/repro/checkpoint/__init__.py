@@ -1,0 +1,1 @@
+from repro.checkpoint.io import load_pytree, save_pytree, latest_step  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pytree checkpoints: msgpack + zstd, path-keyed leaves.
+
+Format: a zstd-compressed msgpack map
+    {"__meta__": {"version": 1}, "<leaf path>": {"dtype","shape","data"}}
+Restoring requires a template pytree (shapes/structure are validated) —
+this catches silent arch/config drift between save and load.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
+    if step is not None:
+        os.makedirs(path, exist_ok=True)
+        path = os.path.join(path, f"step_{step:08d}.ckpt")
+    payload = {"__meta__": {"version": 1}}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for kp, leaf in leaves:
+        arr = np.asarray(leaf)
+        payload[_path_str(kp)] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(zstd.ZstdCompressor(level=3).compress(raw))
+    os.replace(tmp, path)
+    return path
+
+
+def load_pytree(path: str, template: Any) -> Any:
+    with open(path, "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template), None
+    kps, tmpl_leaves = zip(*leaves[0]) if leaves[0] else ((), ())
+    treedef = jax.tree_util.tree_structure(template)
+    out = []
+    for kp, tl in zip(kps, tmpl_leaves):
+        key = _path_str(kp)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        arr = arr.reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(np.shape(tl)):
+            raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} "
+                             f"vs template {np.shape(tl)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)\.ckpt$", name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(ckpt_dir, name), int(m.group(1))
+    return best

@@ -1,0 +1,11 @@
+"""Minitron-8B — pruned Nemotron dense decoder [arXiv:2407.14679]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=16384, vocab_size=256000,
+    head_dim=128,
+    exit_points=(8, 16, 24, 32),
+    source="arXiv:2407.14679",
+)

@@ -1,0 +1,16 @@
+"""DR-FL core: the paper's contribution.
+
+* layerwise    — depth-prefix submodels + masks (§4.2)
+* aggregation  — FedAvg + layer-aligned masked aggregation (Step 2)
+* energy       — Eq. 3–7 time/energy system model + device fleet
+* selection    — dual-selection strategies (MARL / greedy / random / static)
+* marl         — QMIX learner (agents, mixer, replay, TD updates)
+* baselines    — HeteroFL / ScaleFL comparison arms
+"""
+from repro.core.aggregation import fedavg, fl_allreduce, layerwise_aggregate  # noqa: F401
+from repro.core.energy import (BATTERY_JOULES, DeviceProfile, DeviceState,  # noqa: F401
+                               make_fleet, round_cost, charge, total_remaining)
+from repro.core.layerwise import (exit_points, layer_mask, num_submodels,  # noqa: F401
+                                  stacked_update_mask, submodel_fraction)
+from repro.core.selection import (GreedySelector, MarlSelector,  # noqa: F401
+                                  RandomSelector, Selection, StaticTierSelector)

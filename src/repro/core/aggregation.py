@@ -1,0 +1,82 @@
+"""Aggregation operators: FedAvg (Eq. 2) and DR-FL layer-aligned averaging.
+
+Paper Step 2: "layer-align averaging — the same parts of the network will be
+aggregated".  A layer of the global model is updated with the data-size-
+weighted mean of exactly those client gradients whose submodel contains the
+layer; layers no client trained keep the previous global value.
+
+Two deployment forms:
+* :func:`layerwise_aggregate` — host/driver-side over a list of client
+  updates (the FL simulation and the paper repro use this).
+* :func:`fl_allreduce` — the same op expressed as a masked ``psum`` over the
+  ``pod`` mesh axis (multi-pod production mapping; each pod is a client).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(updates: Sequence, weights: Optional[Sequence[float]] = None):
+    """Plain FedAvg over pytrees (Eq. 2). ``weights`` ~ client data sizes."""
+    n = len(updates)
+    if weights is None:
+        w = [1.0 / n] * n
+    else:
+        tot = float(sum(weights))
+        w = [float(x) / tot for x in weights]
+    return jax.tree.map(
+        lambda *xs: sum(wi * x.astype(jnp.float32) for wi, x in zip(w, xs)
+                        ).astype(xs[0].dtype),
+        *updates)
+
+
+def layerwise_aggregate(global_params, client_updates: List, client_masks: List,
+                        weights: Optional[Sequence[float]] = None,
+                        server_lr: float = 1.0):
+    """DR-FL layer-aligned aggregation.
+
+    global_params : pytree W_t
+    client_updates: list of pytrees (client gradient/delta, SAME structure —
+                    clients zero-fill layers they did not train)
+    client_masks  : list of pytrees of 0/1 masks (from
+                    :func:`repro.core.layerwise.stacked_update_mask`),
+                    broadcastable leaf-wise against the updates
+    weights       : client data sizes L_n (paper Eq. 2)
+
+    Returns W_{t+1} = W_t + server_lr * masked weighted mean of updates.
+    """
+    n = len(client_updates)
+    if weights is None:
+        weights = [1.0] * n
+    w = [float(x) for x in weights]
+
+    def agg(gp, *leaves):
+        ups = leaves[:n]
+        msks = leaves[n:]
+        num = sum(wi * m.astype(jnp.float32) * u.astype(jnp.float32)
+                  for wi, u, m in zip(w, ups, msks))
+        den = sum(wi * m.astype(jnp.float32) for wi, m in zip(w, msks))
+        den = jnp.broadcast_to(den, num.shape) if hasattr(den, "shape") else den
+        avg = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+        return (gp.astype(jnp.float32) + server_lr * avg).astype(gp.dtype)
+
+    return jax.tree.map(agg, global_params, *client_updates, *client_masks)
+
+
+def fl_allreduce(update, mask, weight, axis_name: str = "pod"):
+    """Masked layer-aligned aggregation as a collective (inside shard_map).
+
+    Each pod contributes ``update`` (zero outside its submodel), ``mask``
+    (its update mask) and scalar ``weight`` (data size).  Returns the
+    aggregated delta every pod applies to its replica of the global model —
+    DR-FL Step 2 as a single psum pair over the pod axis.
+    """
+    def one(u, m):
+        num = jax.lax.psum(weight * m * u.astype(jnp.float32), axis_name)
+        den = jax.lax.psum(weight * m, axis_name)
+        return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0).astype(u.dtype)
+
+    return jax.tree.map(one, update, mask)

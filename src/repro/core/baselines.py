@@ -1,0 +1,109 @@
+"""Heterogeneous-FL baselines the paper compares against (§5.1.1).
+
+* **HeteroFL** (Diao et al., ICLR'21): clients train *width-sliced*
+  subnetworks of a single global model (channel fraction p in {1/4, 1/2,
+  3/4, 1}); aggregation averages each weight entry over the clients whose
+  slice contains it.
+* **ScaleFL** (Ilhan et al., CVPR'23): 2D (depth + width) scaling with
+  self-distillation.  Our variant: depth prefix (exit m) x width slice p_m;
+  local training distils the deepest held exit into shallower ones.  (The
+  paper's ScaleFL also uses superposition coding for aggregation — out of
+  scope; noted in DESIGN.md.)
+
+Both operate on the ResNet CNN used by the paper repro.  Width slicing is
+structural (channel prefixes), so aggregation masks are computed from slice
+shapes rather than stored.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WIDTH_LEVELS = (0.25, 0.5, 0.75, 1.0)
+
+
+def _slice_arr(a: jnp.ndarray, frac: float, axes: Sequence[int]):
+    sl = [slice(None)] * a.ndim
+    for ax in axes:
+        n = a.shape[ax]
+        sl[ax] = slice(0, max(1, math.ceil(n * frac)))
+    return a[tuple(sl)]
+
+
+def _conv_axes(path_has_stem_in: bool):
+    # conv kernels are [kh, kw, cin, cout]; stem keeps cin=3 full.
+    return (3,) if path_has_stem_in else (2, 3)
+
+
+def width_slice_cnn(params: Dict, frac: float) -> Dict:
+    """HeteroFL submodel: channel-prefix slice of every layer."""
+    out = {"stem": {"conv": _slice_arr(params["stem"]["conv"], frac, (3,)),
+                    "gn": jax.tree.map(lambda a: _slice_arr(a, frac, (0,)),
+                                       params["stem"]["gn"])},
+           "stages": [], "exits": []}
+    for stage in params["stages"]:
+        blocks = []
+        for bp in stage:
+            nb = {
+                "conv1": _slice_arr(bp["conv1"], frac, (2, 3)),
+                "gn1": jax.tree.map(lambda a: _slice_arr(a, frac, (0,)), bp["gn1"]),
+                "conv2": _slice_arr(bp["conv2"], frac, (2, 3)),
+                "gn2": jax.tree.map(lambda a: _slice_arr(a, frac, (0,)), bp["gn2"]),
+            }
+            if "proj" in bp:
+                nb["proj"] = _slice_arr(bp["proj"], frac, (2, 3))
+            blocks.append(nb)
+        out["stages"].append(blocks)
+    for ep in params["exits"]:
+        out["exits"].append({
+            "bottleneck": _slice_arr(ep["bottleneck"], frac, (2, 3)),
+            "gn": jax.tree.map(lambda a: _slice_arr(a, frac, (0,)), ep["gn"]),
+            "w": _slice_arr(ep["w"], frac, (0,)),
+            "b": ep["b"],
+        })
+    return out
+
+
+def heterofl_aggregate(global_params: Dict, updates: List[Dict],
+                       fracs: List[float], weights: List[float] = None):
+    """Scatter-average width-sliced client updates into the global tree.
+
+    Each client's update has the sliced shapes; entry (i,j,...) of a global
+    weight is averaged over the clients whose slice covers it."""
+    if weights is None:
+        weights = [1.0] * len(updates)
+
+    def agg(gp, *ups):
+        num = jnp.zeros(gp.shape, jnp.float32)
+        den = jnp.zeros(gp.shape, jnp.float32)
+        for u, w in zip(ups, weights):
+            pad = [(0, gs - us) for gs, us in zip(gp.shape, u.shape)]
+            up = jnp.pad(u.astype(jnp.float32), pad)
+            mk = jnp.pad(jnp.ones(u.shape, jnp.float32), pad)
+            num = num + w * up
+            den = den + w * mk
+        avg = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+        return (gp.astype(jnp.float32) + avg).astype(gp.dtype)
+
+    # tree structures differ (sliced vs full) only in leaf shapes -> same treedef
+    return jax.tree.map(agg, global_params, *updates)
+
+
+def scalefl_submodel(params: Dict, model_idx: int) -> Dict:
+    """ScaleFL 2D scaling: depth prefix (exit model_idx) + width p_m."""
+    frac = WIDTH_LEVELS[model_idx]
+    sliced = width_slice_cnn(params, frac)
+    return {"stem": sliced["stem"],
+            "stages": sliced["stages"][:model_idx + 1],
+            "exits": sliced["exits"][:model_idx + 1]}
+
+
+def kd_loss(student_logits, teacher_logits, temp: float = 2.0):
+    """Self-distillation: deepest held exit teaches shallower exits."""
+    t = jax.nn.softmax(teacher_logits / temp, axis=-1)
+    ls = jax.nn.log_softmax(student_logits / temp, axis=-1)
+    return -jnp.mean(jnp.sum(t * ls, axis=-1)) * temp * temp

@@ -1,0 +1,94 @@
+"""Layer-wise (depth-prefix) submodels — the paper's §4.2 mechanism.
+
+A *layer-wise model* ``Model_m`` is the global model truncated to its first
+``exit_points[m]`` layers plus an exit head.  Two parameter layouts are
+supported:
+
+* **Transformer stacks** (scan-stacked ``[L, ...]`` params): a submodel is a
+  float ``[L]`` mask (1 = layer present).  Masked forward is identity on
+  skipped layers; masked aggregation averages each layer over exactly the
+  clients that trained it.
+* **CNN stage lists** (the paper's ResNet-18): a submodel is a stage prefix
+  (see :mod:`repro.models.cnn`); the per-stage masks below work on the stage
+  index.
+
+Everything is shape-stable: masks change *values*, never pytree structure,
+so one jitted program serves all M submodels.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def exit_points(cfg: ModelConfig) -> Sequence[int]:
+    if cfg.exit_points:
+        return cfg.exit_points
+    L = cfg.num_layers
+    return (max(1, L // 4), max(1, L // 2), max(1, 3 * L // 4), L)
+
+
+def num_submodels(cfg: ModelConfig) -> int:
+    return len(exit_points(cfg))
+
+
+def layer_mask(cfg: ModelConfig, model_idx: int) -> jnp.ndarray:
+    """Float [num_layers] mask for depth-prefix submodel ``model_idx``."""
+    pts = exit_points(cfg)
+    k = pts[model_idx]
+    return (jnp.arange(cfg.num_layers) < k).astype(jnp.float32)
+
+
+def submodel_layer_count(cfg: ModelConfig, model_idx: int) -> int:
+    return int(exit_points(cfg)[model_idx])
+
+
+def submodel_fraction(cfg: ModelConfig, model_idx: int) -> float:
+    """Fraction of backbone layers a submodel trains (size/energy proxy)."""
+    return submodel_layer_count(cfg, model_idx) / cfg.num_layers
+
+
+def stacked_update_mask(cfg: ModelConfig, model_idx: int, params) -> dict:
+    """Per-leaf masks (broadcastable to each stacked param) marking which
+    layer slices this submodel contributes to during aggregation.
+
+    Leaves without a stacked layer dim (embed, final norm, unembed, shared
+    blocks) get mask 1 — every client trains them.
+    """
+    lm = layer_mask(cfg, model_idx)
+    L = cfg.num_layers
+
+    def leaf_mask(leaf):
+        # stacked leaves have leading dim == num stacked units
+        if leaf.ndim >= 1 and leaf.shape[0] in _stack_sizes(cfg):
+            units = leaf.shape[0]
+            m = _unit_mask(cfg, lm, units)
+            return m.reshape((units,) + (1,) * (leaf.ndim - 1))
+        return jnp.ones((), jnp.float32)
+
+    return jax.tree.map(leaf_mask, params)
+
+
+def _stack_sizes(cfg: ModelConfig):
+    """Possible leading stack sizes for this family."""
+    L = cfg.num_layers
+    sizes = {L}
+    if cfg.family == "ssm":
+        sizes.add(L // 2)                   # mLSTM/sLSTM pair stacks
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        sizes.add(L // cfg.cross_attn_every)  # group stacks
+    return sizes
+
+
+def _unit_mask(cfg: ModelConfig, lm: jnp.ndarray, units: int) -> jnp.ndarray:
+    """Collapse the [L] layer mask to a [units] stack mask (a stacked unit is
+    'trained' if ANY of its layers is)."""
+    L = cfg.num_layers
+    if units == L:
+        return lm
+    per = L // units
+    return lm.reshape(units, per).max(axis=1)

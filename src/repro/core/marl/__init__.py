@@ -1,0 +1,4 @@
+from repro.core.marl.networks import (agent_init, agent_step, mixer_init,
+                                      mixer_apply)  # noqa: F401
+from repro.core.marl.buffer import ReplayBuffer  # noqa: F401
+from repro.core.marl.qmix import QmixLearner, QmixConfig  # noqa: F401

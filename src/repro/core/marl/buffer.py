@@ -1,0 +1,60 @@
+"""Episode replay buffer for QMIX (host-side numpy ring buffer).
+
+Stores whole episodes (one FL run = one episode) so the GRU hidden state can
+be unrolled from t=0 during learning.  Episodes are fixed-length ``T`` with
+a validity mask (FL runs end early when the fleet dies).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, episode_len: int, n_agents: int,
+                 obs_dim: int, state_dim: int, seed: int = 0):
+        self.capacity = capacity
+        self.T = episode_len
+        self.N = n_agents
+        self.size = 0
+        self.ptr = 0
+        self.rng = np.random.default_rng(seed)
+        self.obs = np.zeros((capacity, episode_len + 1, n_agents, obs_dim), np.float32)
+        self.state = np.zeros((capacity, episode_len + 1, state_dim), np.float32)
+        self.actions = np.zeros((capacity, episode_len, n_agents), np.int64)
+        self.rewards = np.zeros((capacity, episode_len), np.float32)
+        self.mask = np.zeros((capacity, episode_len), np.float32)
+
+    def add_episode(self, obs, state, actions, rewards):
+        """obs: [t+1, N, obs_dim]; state: [t+1, state_dim];
+        actions: [t, N]; rewards: [t] — t <= T."""
+        t = len(rewards)
+        i = self.ptr
+        self.obs[i, :t + 1] = obs
+        self.obs[i, t + 1:] = obs[-1]
+        self.state[i, :t + 1] = state
+        self.state[i, t + 1:] = state[-1]
+        self.actions[i, :t] = actions
+        self.actions[i, t:] = 0
+        self.rewards[i, :t] = rewards
+        self.rewards[i, t:] = 0.0
+        self.mask[i, :t] = 1.0
+        self.mask[i, t:] = 0.0
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, batch: int) -> Optional[Dict[str, np.ndarray]]:
+        if self.size == 0:
+            return None
+        idx = self.rng.integers(0, self.size, size=min(batch, self.size))
+        return {
+            "obs": self.obs[idx],
+            "state": self.state[idx],
+            "actions": self.actions[idx],
+            "rewards": self.rewards[idx],
+            "mask": self.mask[idx],
+        }
+
+    def __len__(self):
+        return self.size

@@ -1,0 +1,65 @@
+"""MARL networks (paper Fig. 3): shared-weight agent nets and QMIX mixer.
+
+Agent: MLP -> GRU -> MLP head over M+1 actions (M layer-wise models + "do
+not participate").  All agents share weights ("to decrease storage overhead
+and accelerate convergence, all MLPs and GRUs within the MARL agents share
+their weights") — per-agent behaviour differs through observations and GRU
+hidden states, which are vmapped over the agent axis.
+
+Mixer (QMIX): monotonic mixing of per-agent chosen Qs into Q_tot via
+hypernetworks conditioned on the global state; weights pass through abs() to
+keep dQ_tot/dq_i >= 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (dense_apply, dense_bias_init, gru_apply,
+                                 gru_init, mlp_apply, mlp_init)
+
+
+def agent_init(key, obs_dim: int, num_actions: int, hidden: int = 64):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "enc": mlp_init(k1, [obs_dim, hidden, hidden]),
+        "gru": gru_init(k2, hidden, hidden),
+        "head": mlp_init(k3, [hidden, hidden, num_actions]),
+    }
+
+
+def agent_step(params, obs, h):
+    """obs: [N, obs_dim]; h: [N, hidden] -> (q [N, A], h' [N, hidden]).
+
+    The same params serve every agent (shared weights); the leading axis is
+    the agent axis."""
+    z = mlp_apply(params["enc"], obs)
+    h_new = gru_apply(params["gru"], h, z)
+    q = mlp_apply(params["head"], h_new)
+    return q, h_new
+
+
+def agent_hidden_init(n_agents: int, hidden: int = 64):
+    return jnp.zeros((n_agents, hidden), jnp.float32)
+
+
+def mixer_init(key, n_agents: int, state_dim: int, embed: int = 32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "hyper_w1": mlp_init(k1, [state_dim, embed, n_agents * embed]),
+        "hyper_b1": mlp_init(k2, [state_dim, embed]),
+        "hyper_w2": mlp_init(k3, [state_dim, embed, embed]),
+        "hyper_b2": mlp_init(k4, [state_dim, embed, 1]),
+    }
+
+
+def mixer_apply(params, qs, state, n_agents: int, embed: int = 32):
+    """qs: [..., N]; state: [..., state_dim] -> Q_tot [...]."""
+    n, e = n_agents, embed
+    w1 = jnp.abs(mlp_apply(params["hyper_w1"], state))
+    w1 = w1.reshape(state.shape[:-1] + (n, e))
+    b1 = mlp_apply(params["hyper_b1"], state)
+    hid = jax.nn.elu(jnp.einsum("...n,...ne->...e", qs, w1) + b1)
+    w2 = jnp.abs(mlp_apply(params["hyper_w2"], state))
+    b2 = mlp_apply(params["hyper_b2"], state)[..., 0]
+    return jnp.einsum("...e,...e->...", hid, w2) + b2

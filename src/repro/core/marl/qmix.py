@@ -1,0 +1,134 @@
+"""QMIX learner (Rashid et al. 2018) — pure JAX, jitted end-to-end.
+
+TD target (paper §3.2):
+    y_t = r_t + gamma * Q_tot^target(s_{t+1}, argmax_a Q(s_{t+1}, a))
+    L   = E[(y_t - Q_tot(s_t, a_t))^2]
+
+Double-Q action selection uses the online net; the target net parameters are
+periodically copied (``target_update_every``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.marl.networks import (agent_hidden_init, agent_init,
+                                      agent_step, mixer_apply, mixer_init)
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class QmixConfig:
+    n_agents: int
+    obs_dim: int
+    num_actions: int          # M submodels + 1 no-participate
+    state_dim: int
+    hidden: int = 64
+    mixer_embed: int = 32
+    gamma: float = 0.95
+    lr: float = 5e-4
+    target_update_every: int = 20
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_rounds: int = 200
+    batch_size: int = 16
+
+
+def epsilon(cfg: QmixConfig, round_idx: int) -> float:
+    frac = min(1.0, round_idx / max(1, cfg.eps_decay_rounds))
+    return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+
+
+class QmixLearner:
+    """Owns online + target params and the jitted act/update functions."""
+
+    def __init__(self, cfg: QmixConfig, key):
+        self.cfg = cfg
+        k1, k2 = jax.random.split(key)
+        self.params = {
+            "agent": agent_init(k1, cfg.obs_dim, cfg.num_actions, cfg.hidden),
+            "mixer": mixer_init(k2, cfg.n_agents, cfg.state_dim, cfg.mixer_embed),
+        }
+        self.target = jax.tree.map(jnp.copy, self.params)
+        self.opt = adamw_init(self.params)
+        self.updates = 0
+        self._act = jax.jit(functools.partial(_act, cfg))
+        self._update = jax.jit(functools.partial(_update, cfg))
+
+    def act(self, obs, hidden, key, eps: float, avail=None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """obs [N, obs_dim] -> (actions [N], q_chosen [N], new_hidden)."""
+        if avail is None:
+            avail = jnp.ones((self.cfg.n_agents, self.cfg.num_actions), bool)
+        return self._act(self.params, obs, hidden, key, eps, avail)
+
+    def init_hidden(self):
+        return agent_hidden_init(self.cfg.n_agents, self.cfg.hidden)
+
+    def update(self, batch: Dict) -> Dict[str, float]:
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        self.params, self.opt, metrics = self._update(
+            self.params, self.target, self.opt, batch)
+        self.updates += 1
+        if self.updates % self.cfg.target_update_every == 0:
+            self.target = jax.tree.map(jnp.copy, self.params)
+        return {k: float(v) for k, v in metrics.items()}
+
+
+def _act(cfg: QmixConfig, params, obs, hidden, key, eps, avail):
+    """avail: [N, A] bool — affordability action mask (unaffordable model
+    choices are never taken; exploration samples among available actions)."""
+    q, h = agent_step(params["agent"], obs, hidden)              # [N,A]
+    q_masked = jnp.where(avail, q, -1e9)
+    greedy = jnp.argmax(q_masked, axis=-1)
+    k1, k2 = jax.random.split(key)
+    logits = jnp.where(avail, 0.0, -1e9)
+    rand_a = jax.random.categorical(k1, logits, axis=-1)
+    explore = jax.random.uniform(k2, greedy.shape) < eps
+    act = jnp.where(explore, rand_a, greedy)
+    q_chosen = jnp.take_along_axis(q, act[:, None], axis=-1)[:, 0]
+    return act, q_chosen, h
+
+
+def _unroll(cfg: QmixConfig, params, obs_seq):
+    """obs_seq: [B, T+1, N, obs] -> qs [B, T+1, N, A] via GRU unroll."""
+    B = obs_seq.shape[0]
+    h0 = jnp.zeros((B, cfg.n_agents, cfg.hidden), jnp.float32)
+
+    def step(h, obs_t):                                  # obs_t: [B,N,obs]
+        q, h = jax.vmap(lambda o, hh: agent_step(params["agent"], o, hh))(obs_t, h)
+        return h, q
+
+    _, qs = jax.lax.scan(step, h0, jnp.moveaxis(obs_seq, 1, 0))
+    return jnp.moveaxis(qs, 0, 1)                        # [B,T+1,N,A]
+
+
+def _update(cfg: QmixConfig, params, target, opt, batch):
+    obs, state = batch["obs"], batch["state"]            # [B,T+1,...]
+    actions, rewards, mask = batch["actions"], batch["rewards"], batch["mask"]
+
+    def loss_fn(p):
+        qs = _unroll(cfg, p, obs)                         # [B,T+1,N,A]
+        q_taken = jnp.take_along_axis(
+            qs[:, :-1], actions[..., None], axis=-1)[..., 0]   # [B,T,N]
+        q_tot = mixer_apply(p["mixer"], q_taken, state[:, :-1],
+                            cfg.n_agents, cfg.mixer_embed)  # [B,T]
+
+        tq = _unroll(cfg, target, obs)                    # [B,T+1,N,A]
+        next_best = jnp.argmax(qs[:, 1:], axis=-1)        # double-Q: online argmax
+        tq_next = jnp.take_along_axis(
+            tq[:, 1:], next_best[..., None], axis=-1)[..., 0]  # [B,T,N]
+        tq_tot = mixer_apply(target["mixer"], tq_next, state[:, 1:],
+                             cfg.n_agents, cfg.mixer_embed)
+        y = rewards + cfg.gamma * jax.lax.stop_gradient(tq_tot) * mask
+        td = (y - q_tot) * mask
+        return jnp.sum(td ** 2) / jnp.maximum(mask.sum(), 1.0)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params, new_opt, m = adamw_update(grads, opt, params, lr=cfg.lr,
+                                          weight_decay=0.0, grad_clip=10.0)
+    return new_params, new_opt, {"td_loss": loss, **m}

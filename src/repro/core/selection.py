@@ -1,0 +1,196 @@
+"""Dual-selection strategies (paper §4.3): choose, per round, (a) which
+layer-wise model each device trains and (b) which devices participate.
+
+``MarlSelector`` is the paper's method: per-agent argmax-Q picks the model
+action (action M = do not participate), then Top-K over the chosen Q values
+picks the participants.  Baseline selectors implement the comparison arms
+used in §5 (greedy energy-aware, random, static-by-tier).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import DeviceState, round_cost
+from repro.core.marl.qmix import QmixConfig, QmixLearner, epsilon
+
+
+@dataclasses.dataclass
+class Selection:
+    participants: List[int]          # device indices
+    model_choice: List[int]          # per-device submodel index (-1 = none)
+    q_values: Optional[np.ndarray] = None
+
+
+class SelectorBase:
+    name = "base"
+
+    def select(self, devices: Sequence[DeviceState], round_idx: int,
+               k: int, model_sizes: Sequence[float],
+               model_fractions: Sequence[float]) -> Selection:
+        raise NotImplementedError
+
+    def observe_reward(self, reward: float):
+        pass
+
+
+def obs_vector(dev: DeviceState, round_idx: int, n_rounds: int) -> np.ndarray:
+    """Paper Eq. 9: s_t^n = [L_n, C_n, E_n, t] (+ last-round latencies,
+    §4.3.2), normalised to O(1) ranges."""
+    return np.array([
+        dev.data_size / 1000.0,
+        dev.effective_compute(1.0) / 500.0,
+        dev.remaining / dev.profile.battery,
+        round_idx / max(n_rounds, 1),
+        1.0 if dev.alive else 0.0,
+    ], np.float32)
+
+
+OBS_DIM = 5
+
+
+class MarlSelector(SelectorBase):
+    """The paper's MARL-based dual-selection (QMIX, Fig. 3)."""
+
+    name = "marl"
+
+    def __init__(self, n_devices: int, n_models: int, n_rounds: int,
+                 seed: int = 0):
+        self.n_models = n_models
+        self.n_rounds = n_rounds
+        cfg = QmixConfig(
+            n_agents=n_devices, obs_dim=OBS_DIM, num_actions=n_models + 1,
+            state_dim=n_devices * OBS_DIM,
+            eps_decay_rounds=max(10, n_rounds // 2))
+        self.learner = QmixLearner(cfg, jax.random.PRNGKey(seed))
+        self.key = jax.random.PRNGKey(seed + 1)
+        self.hidden = self.learner.init_hidden()
+        self.total_rounds = 0   # epsilon decays on TOTAL experience (across
+                                # pre-training episodes), not per-episode
+        # episode trace for the replay buffer
+        self.ep_obs: List[np.ndarray] = []
+        self.ep_state: List[np.ndarray] = []
+        self.ep_actions: List[np.ndarray] = []
+        self.ep_rewards: List[float] = []
+
+    def reset_episode(self):
+        self.hidden = self.learner.init_hidden()
+        self.ep_obs, self.ep_state = [], []
+        self.ep_actions, self.ep_rewards = [], []
+
+    def select(self, devices, round_idx, k, model_sizes, model_fractions):
+        obs = np.stack([obs_vector(d, round_idx, self.n_rounds) for d in devices])
+        state = obs.reshape(-1)
+        self.key, sub = jax.random.split(self.key)
+        eps = epsilon(self.learner.cfg, self.total_rounds)
+        self.total_rounds += 1
+        # affordability action mask ("prevent selected devices from dropping
+        # out of the FL process due to energy limitations", paper §4.2 Step 3)
+        avail = np.zeros((len(devices), self.n_models + 1), bool)
+        avail[:, self.n_models] = True      # not participating: always legal
+        for i, d in enumerate(devices):
+            if not d.alive:
+                continue
+            for m in range(self.n_models):
+                _, _, e_tra, e_com = round_cost(d, model_sizes[m],
+                                                model_fractions[m])
+                avail[i, m] = (e_tra + e_com) < d.remaining
+        actions, qv, self.hidden = self.learner.act(
+            jnp.asarray(obs), self.hidden, sub, eps, jnp.asarray(avail))
+        actions = np.array(actions)   # writable copies
+        qv = np.array(qv)
+        # dead devices never participate
+        for i, d in enumerate(devices):
+            if not d.alive:
+                actions[i] = self.n_models
+        willing = [i for i in range(len(devices)) if actions[i] < self.n_models]
+        # Top-K over Q values among willing agents (paper §4.3.3)
+        willing.sort(key=lambda i: -qv[i])
+        chosen = willing[:k]
+        model_choice = [int(actions[i]) if i in chosen else -1
+                        for i in range(len(devices))]
+        self.ep_obs.append(obs)
+        self.ep_state.append(state)
+        self.ep_actions.append(actions.copy())
+        return Selection(participants=chosen, model_choice=model_choice,
+                         q_values=qv)
+
+    def observe_reward(self, reward: float):
+        self.ep_rewards.append(float(reward))
+
+    def episode_arrays(self, final_devices, round_idx):
+        obs = np.stack(self.ep_obs + [np.stack(
+            [obs_vector(d, round_idx, self.n_rounds) for d in final_devices])])
+        state = obs.reshape(obs.shape[0], -1)
+        return (obs, state, np.stack(self.ep_actions),
+                np.asarray(self.ep_rewards, np.float32))
+
+
+class GreedySelector(SelectorBase):
+    """Energy-aware greedy (the paper's baseline adaptation): each device
+    picks the LARGEST submodel it can afford this round; Top-K by remaining
+    energy."""
+
+    name = "greedy"
+
+    def select(self, devices, round_idx, k, model_sizes, model_fractions):
+        choice = {}
+        for i, d in enumerate(devices):
+            if not d.alive:
+                continue
+            best = -1
+            for m in reversed(range(len(model_sizes))):
+                t_tra, t_com, e_tra, e_com = round_cost(
+                    d, model_sizes[m], model_fractions[m])
+                if e_tra + e_com < d.remaining:
+                    best = m
+                    break
+            if best >= 0:
+                choice[i] = best
+        order = sorted(choice, key=lambda i: -devices[i].remaining)
+        chosen = order[:k]
+        model_choice = [choice.get(i, -1) if i in chosen else -1
+                        for i in range(len(devices))]
+        return Selection(participants=chosen, model_choice=model_choice)
+
+
+class RandomSelector(SelectorBase):
+    """Vanilla-FL-style: uniform random K clients, random affordable model."""
+
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def select(self, devices, round_idx, k, model_sizes, model_fractions):
+        alive = [i for i, d in enumerate(devices) if d.alive]
+        self.rng.shuffle(alive)
+        chosen = alive[:k]
+        model_choice = [-1] * len(devices)
+        for i in chosen:
+            model_choice[i] = int(self.rng.integers(0, len(model_sizes)))
+        return Selection(participants=chosen, model_choice=model_choice)
+
+
+class StaticTierSelector(SelectorBase):
+    """HeteroFL-style static assignment: submodel fixed by device tier."""
+
+    name = "static"
+    TIER_MODEL = {"small": 0, "medium": 1, "large": 3}
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def select(self, devices, round_idx, k, model_sizes, model_fractions):
+        alive = [i for i, d in enumerate(devices) if d.alive]
+        self.rng.shuffle(alive)
+        chosen = alive[:k]
+        model_choice = [-1] * len(devices)
+        for i in chosen:
+            m = self.TIER_MODEL[devices[i].profile.tier]
+            model_choice[i] = min(m, len(model_sizes) - 1)
+        return Selection(participants=chosen, model_choice=model_choice)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (synthetic_image_dataset,
+                                  synthetic_lm_dataset)  # noqa: F401
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.loader import batch_iterator, epoch_batches  # noqa: F401

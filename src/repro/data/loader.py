@@ -1,0 +1,25 @@
+"""Minimal batching utilities (host numpy -> device arrays at the jit edge)."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def epoch_batches(x: np.ndarray, y: np.ndarray, batch: int, rng: np.random.Generator
+                  ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """One shuffled epoch; last partial batch dropped (shape-stable jit)."""
+    idx = rng.permutation(len(x))
+    for i in range(0, len(idx) - batch + 1, batch):
+        j = idx[i:i + batch]
+        yield x[j], y[j]
+    if len(idx) < batch:   # tiny client: one padded batch (wrap-around)
+        j = np.resize(idx, batch)
+        yield x[j], y[j]
+
+
+def batch_iterator(x: np.ndarray, y: np.ndarray, batch: int, seed: int = 0
+                   ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    while True:
+        yield from epoch_batches(x, y, batch, rng)

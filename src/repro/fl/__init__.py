@@ -1,0 +1,2 @@
+from repro.fl.simulation import FLConfig, run_simulation  # noqa: F401
+from repro.fl.environment import FLEnv, FLEnvConfig  # noqa: F401

@@ -1,0 +1,125 @@
+"""FL client-side local training (paper Step 5).
+
+Clients train with SGD + cross-entropy on their local shard.  Three client
+kinds mirror the three methods under comparison:
+
+* ``drfl_client_update``    — depth-prefix submodel (loss at exit m; grads
+  are exactly zero outside the submodel, so the returned full-structure
+  delta is already "zero-filled" for layer-aligned aggregation).
+* ``heterofl_client_update`` — width-sliced submodel (HeteroFL).
+* ``scalefl_client_update``  — depth+width submodel with self-distillation.
+
+Each kind jits one program per submodel index — shapes are static per index,
+so 4 programs cover the whole fleet.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import kd_loss, scalefl_submodel, width_slice_cnn, WIDTH_LEVELS
+from repro.data.loader import epoch_batches
+from repro.models import cnn
+
+
+def _ce(logits, y):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - tgt)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _drfl_sgd_step(params, x, y, model_idx: int, lr: float = 0.05):
+    """Joint CE over every exit the submodel holds (BranchyNet-style deep
+    supervision — each of the paper's layer-wise models carries a bottleneck
+    + classifier per block, so shallow exits keep learning on deep clients
+    and layer-aligned aggregation stays useful for Model_1..Model_m)."""
+    def loss_fn(p):
+        sub = {"stem": p["stem"], "stages": p["stages"][:model_idx + 1],
+               "exits": p["exits"][:model_idx + 1]}
+        outs = cnn.apply_all_exits(sub, x)
+        # deepest held exit carries full weight; shallower exits get 0.3
+        loss = _ce(outs[-1], y)
+        for o in outs[:-1]:
+            loss = loss + 0.3 * _ce(o, y)
+        return loss / (1.0 + 0.3 * (len(outs) - 1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+@jax.jit
+def _slice_sgd_step(params, x, y, lr: float = 0.05):
+    """For width-sliced trees (HeteroFL): loss at the tree's deepest exit."""
+    def loss_fn(p):
+        outs = cnn.apply_all_exits(p, x)
+        return _ce(outs[-1], y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+@jax.jit
+def _scalefl_sgd_step(params, x, y, lr: float = 0.05):
+    """Depth+width tree; CE at every held exit + KD deepest->shallower."""
+    def loss_fn(p):
+        outs = cnn.apply_all_exits(p, x)
+        teacher = outs[-1]
+        loss = _ce(teacher, y)
+        for s in outs[:-1]:
+            loss = loss + 0.5 * (_ce(s, y) + kd_loss(s, jax.lax.stop_gradient(teacher)))
+        return loss / max(len(outs), 1)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+def _run_epochs(step_fn, params, x, y, epochs, batch, rng, lr):
+    losses = []
+    for _ in range(epochs):
+        for xb, yb in epoch_batches(x, y, batch, rng):
+            params, l = step_fn(params, jnp.asarray(xb), jnp.asarray(yb), lr)
+            losses.append(float(l))
+    return params, float(np.mean(losses)) if losses else 0.0
+
+
+def drfl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
+                       batch=32, lr=0.05, seed=0) -> Tuple[Dict, float]:
+    """Returns (delta pytree full structure, mean local loss)."""
+    rng = np.random.default_rng(seed)
+    params = global_params
+    losses = []
+    for _ in range(epochs):
+        for xb, yb in epoch_batches(x, y, batch, rng):
+            params, l = _drfl_sgd_step(params, jnp.asarray(xb), jnp.asarray(yb),
+                                       model_idx, lr)
+            losses.append(float(l))
+    delta = jax.tree.map(lambda a, b: a - b, params, global_params)
+    return delta, float(np.mean(losses)) if losses else 0.0
+
+
+def heterofl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
+                           batch=32, lr=0.05, seed=0):
+    """Returns (sliced delta, mean loss); slice width = WIDTH_LEVELS[idx]."""
+    frac = WIDTH_LEVELS[model_idx]
+    sub = width_slice_cnn(global_params, frac)
+    rng = np.random.default_rng(seed)
+    new, loss = _run_epochs(_slice_sgd_step, sub, x, y, epochs, batch, rng, lr)
+    delta = jax.tree.map(lambda a, b: a - b, new, sub)
+    return delta, loss
+
+
+def scalefl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
+                          batch=32, lr=0.05, seed=0):
+    sub = scalefl_submodel(global_params, model_idx)
+    rng = np.random.default_rng(seed)
+    new, loss = _run_epochs(_scalefl_sgd_step, sub, x, y, epochs, batch, rng, lr)
+    delta = jax.tree.map(lambda a, b: a - b, new, sub)
+    return delta, loss

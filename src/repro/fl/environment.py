@@ -1,0 +1,110 @@
+"""Gym-style environment wrapper around the DR-FL energy simulation.
+
+For MARL research use: exposes the paper's MDP (§4.3) — per-agent
+observations (Eq. 9), joint actions (submodel choice / abstain per device),
+team reward (Eq. 10) — without running actual model training.  The accuracy
+term in the reward is driven by a pluggable *accuracy proxy* (default: a
+diminishing-returns curve of useful aggregated work), so policy research can
+iterate thousands of episodes per minute; the full simulation
+(:mod:`repro.fl.simulation`) swaps in real training for the final numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.energy import (DeviceState, charge, make_fleet, round_cost,
+                               total_remaining)
+from repro.core.selection import OBS_DIM, obs_vector
+
+
+def default_accuracy_proxy(progress: float) -> float:
+    """Diminishing-returns accuracy curve: acc in [0.1, ~0.95]."""
+    return 0.1 + 0.85 * (1.0 - np.exp(-progress))
+
+
+@dataclasses.dataclass
+class FLEnvConfig:
+    n_devices: int = 20
+    n_rounds: int = 50
+    k_fraction: float = 0.1            # Top-K participation
+    n_models: int = 4
+    model_bytes: Tuple[float, ...] = (2.8e6, 8.4e6, 22.5e6, 44.8e6)
+    model_fractions: Tuple[float, ...] = (0.11, 0.3, 0.72, 1.0)
+    reward_weights: Tuple[float, float, float] = (1000.0, 0.01, 1.0)
+    energy_scale: float = 0.15
+    local_epochs: int = 5
+    seed: int = 0
+
+
+class FLEnv:
+    """step(actions) -> (obs, reward, done, info).
+
+    actions: int array [n_devices]; value in [0, n_models) = train that
+    submodel, n_models = do not participate.  Top-K filtering is the
+    CALLER's job (the paper filters by Q value; the env accepts any subset).
+    """
+
+    def __init__(self, cfg: FLEnvConfig,
+                 accuracy_proxy: Callable[[float], float] = default_accuracy_proxy):
+        self.cfg = cfg
+        self.proxy = accuracy_proxy
+        self.obs_dim = OBS_DIM
+        self.reset()
+
+    def reset(self) -> np.ndarray:
+        cfg = self.cfg
+        self.fleet: List[DeviceState] = make_fleet(cfg.n_devices, cfg.seed)
+        for d in self.fleet:
+            d.remaining = d.profile.battery * cfg.energy_scale
+        self.t = 0
+        self.progress = 0.0
+        self.acc = self.proxy(0.0)
+        self.e_prev = total_remaining(self.fleet)
+        return self._obs()
+
+    def _obs(self) -> np.ndarray:
+        return np.stack([obs_vector(d, self.t, self.cfg.n_rounds)
+                         for d in self.fleet])
+
+    @property
+    def state(self) -> np.ndarray:
+        return self._obs().reshape(-1)
+
+    def step(self, actions: np.ndarray):
+        cfg = self.cfg
+        t_round, useful = 0.0, 0.0
+        dropouts = 0
+        for i, a in enumerate(np.asarray(actions)):
+            a = int(a)
+            if a >= cfg.n_models:
+                continue
+            dev = self.fleet[i]
+            if not dev.alive:
+                continue
+            t_tra, t_com, e_tra, e_com = round_cost(
+                dev, cfg.model_bytes[a], cfg.model_fractions[a],
+                cfg.local_epochs)
+            if not charge(dev, e_tra, e_com):
+                dropouts += 1
+                continue                      # wasted energy, no contribution
+            t_round = max(t_round, t_tra + t_com)
+            # contribution to global-model progress ~ data x submodel depth
+            useful += (dev.data_size / 1000.0) * cfg.model_fractions[a]
+
+        self.progress += 0.25 * useful
+        new_acc = self.proxy(self.progress)
+        e_now = total_remaining(self.fleet)
+        w1, w2, w3 = cfg.reward_weights
+        reward = (w1 * (new_acc - self.acc) - w2 * (self.e_prev - e_now)
+                  - w3 * (t_round / 60.0))
+        self.acc, self.e_prev = new_acc, e_now
+        self.t += 1
+        done = (self.t >= cfg.n_rounds
+                or not any(d.alive for d in self.fleet))
+        info = {"acc": self.acc, "energy": e_now, "round_time": t_round,
+                "alive": sum(d.alive for d in self.fleet),
+                "dropouts": dropouts}
+        return self._obs(), float(reward), done, info

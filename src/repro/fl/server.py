@@ -1,0 +1,127 @@
+"""FL server: global-model bookkeeping, aggregation dispatch, evaluation.
+
+Aggregation arms:
+* DR-FL      — layer-aligned masked averaging (paper Step 2)
+* HeteroFL   — width-slice scatter averaging
+* ScaleFL    — depth+width scatter averaging (structure-tolerant)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import layerwise_aggregate
+from repro.models import cnn
+
+
+# ---------------------------------------------------------------------------
+# evaluation (paper: small validation set on the cloud server)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _eval_batch(params, x, y):
+    outs = cnn.apply_all_exits(params, x)
+    return jnp.stack([jnp.mean((jnp.argmax(o, -1) == y)) for o in outs])
+
+
+def evaluate(params, x_val: np.ndarray, y_val: np.ndarray,
+             batch: int = 256) -> np.ndarray:
+    """Per-exit accuracy on the server validation set."""
+    accs, n = [], 0
+    for i in range(0, len(x_val), batch):
+        xb = jnp.asarray(x_val[i:i + batch])
+        yb = jnp.asarray(y_val[i:i + batch])
+        accs.append(np.asarray(_eval_batch(params, xb, yb)) * len(xb))
+        n += len(xb)
+    return np.sum(accs, axis=0) / max(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# DR-FL aggregation masks for the CNN tree
+# ---------------------------------------------------------------------------
+
+
+def cnn_update_mask(global_params, model_idx: int):
+    """Scalar 0/1 masks matching the CNN tree: stem + stages<=m + exits<=m
+    (clients deep-supervise every exit their submodel holds)."""
+    def const(tree, v):
+        return jax.tree.map(lambda _: jnp.asarray(v, jnp.float32), tree)
+
+    return {
+        "stem": const(global_params["stem"], 1.0),
+        "stages": [const(s, 1.0 if i <= model_idx else 0.0)
+                   for i, s in enumerate(global_params["stages"])],
+        "exits": [const(e, 1.0 if i <= model_idx else 0.0)
+                  for i, e in enumerate(global_params["exits"])],
+    }
+
+
+def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
+                   weights: Sequence[float], server_lr: float = 1.0):
+    masks = [cnn_update_mask(global_params, m) for m in model_idxs]
+    return layerwise_aggregate(global_params, deltas, masks, weights,
+                               server_lr=server_lr)
+
+
+# ---------------------------------------------------------------------------
+# HeteroFL / ScaleFL aggregation (width / depth+width scatter)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_avg(gp, contribs):
+    """contribs: list of (delta_leaf, weight); delta may be channel-sliced."""
+    num = jnp.zeros(gp.shape, jnp.float32)
+    den = jnp.zeros(gp.shape, jnp.float32)
+    for u, w in contribs:
+        pad = [(0, gs - us) for gs, us in zip(gp.shape, u.shape)]
+        num = num + w * jnp.pad(u.astype(jnp.float32), pad)
+        den = den + w * jnp.pad(jnp.ones(u.shape, jnp.float32), pad)
+    avg = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+    return (gp.astype(jnp.float32) + avg).astype(gp.dtype)
+
+
+def _collect(gp, delta, w, out):
+    """Recursively align (possibly truncated) delta subtree against global."""
+    if isinstance(gp, dict):
+        for k, v in gp.items():
+            if delta is not None and k in delta:
+                _collect(v, delta[k], w, out)
+            else:
+                _collect(v, None, w, out)
+    elif isinstance(gp, (list, tuple)):
+        for i, v in enumerate(gp):
+            d = delta[i] if (delta is not None and i < len(delta)) else None
+            _collect(v, d, w, out)
+    else:
+        out.setdefault(id(gp), (gp, []))
+        if delta is not None:
+            out[id(gp)][1].append((delta, w))
+
+
+def aggregate_sliced(global_params, deltas: List, weights: Sequence[float]):
+    """Structure- and shape-tolerant scatter aggregation (HeteroFL/ScaleFL)."""
+    table: Dict[int, tuple] = {}
+    # first register every global leaf (ordering via one pass with None)
+    _collect(global_params, None, 0.0, table)
+    for d, w in zip(deltas, weights):
+        _collect(global_params, d, float(w), table)
+    wtot = float(sum(weights)) or 1.0
+
+    def rebuild(gp):
+        if isinstance(gp, dict):
+            return {k: rebuild(v) for k, v in gp.items()}
+        if isinstance(gp, (list, tuple)):
+            t = [rebuild(v) for v in gp]
+            return t if isinstance(gp, list) else tuple(t)
+        leaf, contribs = table[id(gp)]
+        if not contribs:
+            return leaf
+        contribs = [(u, w / wtot) for u, w in contribs]
+        return _scatter_avg(leaf, contribs)
+
+    return rebuild(global_params)

@@ -1,0 +1,92 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA-aware).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA flash-attention algorithm is
+re-blocked for the TPU memory hierarchy — each grid step holds one
+``[block_q, head_dim]`` query tile plus the full per-(batch,head) K/V rows
+in VMEM (K/V tiles stream through the MXU via an inner ``fori_loop`` over
+``block_k`` slices; online-softmax running max/sum live in f32 VREGs).
+Block shapes are MXU-aligned (128 multiples).  GQA is handled by the K/V
+``index_map`` (query head h reads KV head ``h // group``), so repeated KV
+heads are never materialised.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.py``; intended to
+be compiled for TPU where ``jax.devices()[0].platform == 'tpu'``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, causal, window,
+            seq_k):
+    bq, D = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * scale                 # [bq, D]
+    iq = pl.program_id(1)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    nk = seq_k // block_k
+    if causal:
+        # only KV blocks at or before this query block contribute
+        nk_live = jnp.minimum(nk, ((iq + 1) * bq + block_k - 1) // block_k)
+    else:
+        nk_live = nk
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                          # [bq, bk] f32 (MXU)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((bq, D), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk_live, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0,
+                         block_q=128, block_k=128, interpret=False):
+    """q: [BHq, Sq, D]; k/v: [BHkv, Sk, D] with BHq = BHkv * group."""
+    BH, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    group = BH // BHkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    scale = 1.0 / math.sqrt(D)
+    grid = (BH, Sq // block_q)
+
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
+                               causal=causal, window=window, seq_k=Sk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, iq: (bh, iq, 0)),
+            pl.BlockSpec((1, Sk, D), lambda bh, iq: (bh // group, 0, 0)),
+            pl.BlockSpec((1, Sk, D), lambda bh, iq: (bh // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, iq: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Jit'd public wrapper: model-layout in/out + CPU interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    """Model layout: q [B, Sq, Hq, D]; k/v [B, Sk, Hkv, D] -> [B, Sq, Hq, D].
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    qb = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    o = flash_attention_bhsd(qb, kb, vb, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return o.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

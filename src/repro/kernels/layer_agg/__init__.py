@@ -1,0 +1,3 @@
+from repro.kernels.layer_agg.ops import (aggregate_stacked_leaf,  # noqa: F401
+                                         layer_agg_op)
+from repro.kernels.layer_agg.ref import layer_agg_ref  # noqa: F401

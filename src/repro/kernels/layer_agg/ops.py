@@ -1,0 +1,47 @@
+"""Jit'd wrapper + pytree adapter for the layer-agg kernel.
+
+``aggregate_stacked_pytree`` flattens every stacked ``[L, ...]`` leaf of N
+client update pytrees into one ``[N, L, D]`` call (padding D to the block
+multiple), then scatters results back — so the whole of DR-FL Step 2 for a
+scanned transformer is a handful of fused kernel launches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.layer_agg.layer_agg import layer_agg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def layer_agg_op(updates, masks, weights, *, block_d=2048, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, L, D = updates.shape
+    pad = (-D) % min(block_d, max(D, 1))
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, 0), (0, pad)))
+    out = layer_agg(updates, masks, weights,
+                    block_d=min(block_d, D + pad), interpret=interpret)
+    return out[:, :D]
+
+
+def aggregate_stacked_leaf(global_leaf, client_leaves, client_masks, weights,
+                           interpret=None):
+    """global_leaf: [L, ...]; client_leaves: list of [L, ...];
+    client_masks: list of [L] (or broadcastable).  Returns updated leaf."""
+    L = global_leaf.shape[0]
+    D = int(global_leaf.size // L)
+    U = jnp.stack([c.reshape(L, D) for c in client_leaves])      # [N,L,D]
+    M = jnp.stack([jnp.broadcast_to(m.reshape(m.shape[0], -1)[:, 0], (L,))
+                   for m in client_masks])                        # [N,L]
+    w = jnp.asarray(weights, jnp.float32)
+    avg = layer_agg_op(U, M, w, interpret=interpret)              # [L,D]
+    return (global_leaf.astype(jnp.float32)
+            + avg.reshape(global_leaf.shape)).astype(global_leaf.dtype)

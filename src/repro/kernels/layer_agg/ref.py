@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the layer-aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def layer_agg_ref(updates, masks, weights):
+    """updates: [N,L,D]; masks: [N,L]; weights: [N] -> [L,D] float32."""
+    wm = weights[:, None].astype(jnp.float32) * masks.astype(jnp.float32)  # [N,L]
+    num = jnp.einsum("nl,nld->ld", wm, updates.astype(jnp.float32))
+    den = wm.sum(axis=0)[:, None]
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)

@@ -1,0 +1,2 @@
+from repro.kernels.rmsnorm.ops import rmsnorm_op  # noqa: F401
+from repro.kernels.rmsnorm.ref import rmsnorm_ref  # noqa: F401

@@ -1,0 +1,31 @@
+"""Jit'd wrapper for the fused RMSNorm kernel (model layout [..., d])."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_op(x, scale, *, eps=1e-5, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    R = 1
+    for s in shape[:-1]:
+        R *= s
+    x2d = x.reshape(R, shape[-1])
+    # pick the largest row block that divides R
+    br = 256
+    while R % br:
+        br //= 2
+    out = rmsnorm(x2d, scale, eps=eps, block_rows=max(br, 1),
+                  interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x2d, scale, eps=1e-5):
+    xf = x2d.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x2d.dtype)

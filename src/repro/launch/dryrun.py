@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("DRYRUN_DEVICES", "512")
+    + ((" " + os.environ["DRYRUN_EXTRA_XLA_FLAGS"])
+       if "DRYRUN_EXTRA_XLA_FLAGS" in os.environ else ""))
+
+"""Multi-pod dry-run: prove every (architecture × input-shape × mesh)
+combination lowers AND compiles under the production sharding config.
+
+The two lines above MUST stay first — jax locks the device count on first
+initialisation, and the production meshes need 512 placeholder host devices
+(set DRYRUN_DEVICES to shrink for in-test debug meshes).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+        --shape train_4k --mesh single [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.specs import (decode_cache_shardings, decode_inputs,
+                                params_shardings, state_shardings,
+                                train_input_shardings, train_inputs,
+                                _params_shape, batch_spec)
+from repro.launch.steps import (TrainConfig, adapt_for_shape,
+                                build_fl_bucketed_train_step,
+                                build_fl_train_step, build_prefill_step,
+                                build_serve_step, build_train_step,
+                                fl_batch_extras, train_state_shape)
+from repro.sharding.rules import set_activation_mesh
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def make_mesh(kind: str):
+    if kind == "single":
+        return make_production_mesh(multi_pod=False)
+    if kind == "multi":
+        return make_production_mesh(multi_pod=True)
+    if kind == "debug":
+        return make_debug_mesh(multi_pod=False)
+    if kind == "debug-multi":
+        return make_debug_mesh(multi_pod=True)
+    raise ValueError(kind)
+
+
+def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
+               verbose: bool = True, tcfg: TrainConfig = None,
+               step_kind: str = "default", moe_decode: str = None):
+    cfg = adapt_for_shape(get_config(arch), INPUT_SHAPES[shape_name])
+    if moe_decode:
+        cfg = dataclasses.replace(cfg, moe_decode_impl=moe_decode)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_mesh(mesh_kind)
+    tcfg = tcfg or TrainConfig()
+    t0 = time.time()
+
+    with mesh:
+        set_activation_mesh(mesh)
+        try:
+            if shape.kind == "train":
+                if step_kind == "fl":
+                    model, step = build_fl_train_step(cfg, tcfg)
+                elif step_kind == "fl-bucketed":
+                    model, step, nb = build_fl_bucketed_train_step(cfg, tcfg)
+                else:
+                    model, step = build_train_step(cfg, tcfg)
+                state_shp = train_state_shape(model, tcfg)
+                inputs = train_inputs(cfg, shape)
+                in_batch_sh = train_input_shardings(cfg, shape, mesh)
+                if step_kind == "fl-bucketed":
+                    B, S = shape.global_batch, shape.seq_len
+                    bsp = batch_spec(mesh)
+                    row_axes = tuple(a for a in ("pod", "data", "model")
+                                     if a in mesh.axis_names
+                                     and (B // nb) % mesh.shape[a] == 0)
+                    # greedily use axes that divide the per-bucket rows
+                    rows = B // nb
+                    used, prod = [], 1
+                    for a in row_axes:
+                        if rows % (prod * mesh.shape[a]) == 0:
+                            used.append(a)
+                            prod *= mesh.shape[a]
+                    for kk in ("tokens", "labels"):
+                        inputs[kk] = jax.ShapeDtypeStruct(
+                            (nb, B // nb, S), inputs[kk].dtype)
+                        in_batch_sh[kk] = NamedSharding(
+                            mesh, P(None, tuple(used) if len(used) != 1
+                                    else used[0], None))
+                if step_kind == "fl":
+                    extras = fl_batch_extras(cfg, shape)
+                    inputs.update(extras)
+                    bsp = batch_spec(mesh)
+                    in_batch_sh["layer_gates"] = NamedSharding(
+                        mesh, P(None, *bsp))
+                    in_batch_sh["layer_counts"] = NamedSharding(mesh, P())
+                    in_batch_sh["n_clients"] = NamedSharding(mesh, P())
+                in_sh = (state_shardings(state_shp, mesh), in_batch_sh)
+                lowered = jax.jit(
+                    step, in_shardings=in_sh,
+                    out_shardings=(in_sh[0], None),
+                    donate_argnums=(0,),
+                ).lower(state_shp, inputs)
+            elif shape.kind == "prefill":
+                model, step = build_prefill_step(cfg, tcfg)
+                pshp = _params_shape(model)
+                in_sh = (params_shardings(pshp, mesh),
+                         train_input_shardings(cfg, shape, mesh))
+                inputs = train_inputs(cfg, shape)
+                inputs.pop("labels")
+                in_sh[1].pop("labels", None)
+                lowered = jax.jit(step, in_shardings=in_sh).lower(pshp, inputs)
+            else:  # decode
+                set_activation_mesh(mesh, model_axis_ok=False)
+                model, step = build_serve_step(cfg)
+                pshp = _params_shape(model)
+                cache_shp, tok, pos = decode_inputs(model, cfg, shape)
+                bsp = batch_spec(mesh)
+                in_sh = (params_shardings(pshp, mesh),
+                         decode_cache_shardings(cache_shp, mesh),
+                         NamedSharding(mesh, P(*bsp, None))
+                         if shape.global_batch > 1 else
+                         NamedSharding(mesh, P(None, None)),
+                         NamedSharding(mesh, P()))
+                lowered = jax.jit(step, in_shardings=in_sh,
+                                  donate_argnums=(1,)).lower(
+                    pshp, cache_shp, tok, pos)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        finally:
+            set_activation_mesh(None)
+
+    mem = H.memory_stats(compiled)
+    terms = H.roofline_terms(compiled)
+    mf = H.model_flops_per_step(cfg, shape)
+    n_dev = mesh.devices.size
+    terms["model_flops_per_device"] = mf / n_dev
+    terms["useful_flops_ratio"] = (mf / n_dev) / max(terms["hlo_flops_per_device"], 1.0)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "step": step_kind,
+        "devices": int(n_dev), "kind": shape.kind,
+        "window_override": cfg.window if cfg.window else 0,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "roofline": terms, "ok": True,
+    }
+    if verbose:
+        gb = mem.get("total_hbm_bytes", 0) / 2**30
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+              f"hbm/device={gb:.2f}GiB dominant={terms['dominant']} "
+              f"t_comp={terms['t_compute_s']:.4g}s t_mem={terms['t_memory_s']:.4g}s "
+              f"t_coll={terms['t_collective_s']:.4g}s "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print("  memory_analysis:", {k: round(v / 2**30, 3) for k, v in mem.items()})
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print("  cost_analysis: flops=%.4g bytes=%.4g" % (
+            float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0))))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both", "debug", "debug-multi"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--step", default="default",
+                    choices=["default", "fl", "fl-bucketed"],
+                    help="fl = DR-FL-over-pods masked train step; fl-bucketed "
+                         "= statically depth-bucketed variant (train shapes)")
+    ap.add_argument("--attn-chunk", type=int, default=0,
+                    help=">0: online-softmax KV-block attention (perf knob)")
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate weights over the data axis (pure TP+DP)")
+    ap.add_argument("--no-act-model", action="store_true",
+                    help="keep the residual stream replicated on the model axis")
+    ap.add_argument("--repeat-kv", action="store_true",
+                    help="materialise repeated KV heads (shardable Q-head axis)")
+    ap.add_argument("--zero1", action="store_true",
+                    help="with --no-fsdp: shard optimizer moments over data")
+    ap.add_argument("--attn-seq", action="store_true",
+                    help="context-parallel attention (Q sequence-sharded)")
+    ap.add_argument("--attn-heads", action="store_true",
+                    help="pad-shard the attention head axis (with --repeat-kv)")
+    ap.add_argument("--act-seq", action="store_true",
+                    help="sequence-parallel residual stream (Megatron-style)")
+    ap.add_argument("--block-gather", action="store_true",
+                    help="bf16 all-gather of the residual at block entry")
+    ap.add_argument("--dp2d", action="store_true",
+                    help="2-D data parallelism: batch over (data x model)")
+    ap.add_argument("--moe-decode", default=None, choices=["gather", "dispatch"],
+                    help="MoE decode path (perf knob)")
+    ap.add_argument("--json", default=None, help="write results to this path")
+    args = ap.parse_args(argv)
+
+    from repro.sharding.rules import set_sharding_policy
+    set_sharding_policy(fsdp=not args.no_fsdp, act_model=not args.no_act_model,
+                        repeat_kv=args.repeat_kv, zero1=args.zero1,
+                        attn_seq=args.attn_seq, attn_heads=args.attn_heads,
+                        act_seq=args.act_seq, block_gather=args.block_gather,
+                        dp2d=args.dp2d)
+    tcfg = TrainConfig(attn_chunk=args.attn_chunk, remat=args.remat)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                try:
+                    results.append(dryrun_one(arch, shape, mk, tcfg=tcfg, step_kind=args.step,
+                                              moe_decode=args.moe_decode))
+                except Exception as e:
+                    failures += 1
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape, "mesh": mk,
+                                    "ok": False, "error": f"{type(e).__name__}: {e}"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[dryrun] wrote {len(results)} results to {args.json}")
+    print(f"[dryrun] {len(results) - failures}/{len(results)} combinations OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+"""Profiling aid for §Perf: per-op / per-computation cost attribution over
+the compiled HLO (same loop-aware walk as hlo_cost, but keeping the
+breakdown instead of totals).  This is the 'profile' available without real
+hardware — it tells you WHICH collectives/tensors dominate a term."""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from repro.launch.hlo_cost import HloCost, _ATTR_RE, _shape_bytes, _TRIVIAL
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def breakdown(text: str, top: int = 12) -> Dict[str, List[Tuple]]:
+    hc = HloCost(text)
+    mod = hc.mod
+    coll: Dict[Tuple, float] = {}
+    mem: Dict[Tuple, float] = {}
+    flops: Dict[Tuple, float] = {}
+
+    def walk(name: str, mult: float, top_level: bool, seen):
+        if name in seen or name not in mod.computations:
+            return
+        seen = seen | {name}
+        for inst in mod.computations[name]:
+            op = inst.op
+            if op == "while":
+                attrs = dict(_ATTR_RE.findall(inst.line))
+                walk(attrs.get("body", ""), mult * hc._trip(inst), True, seen)
+                continue
+            if op == "conditional":
+                continue
+            for kind, target in _ATTR_RE.findall(inst.line):
+                if kind in ("calls", "to_apply"):
+                    walk(target, mult, False, seen)
+            if op == "dot":
+                flops[(name[:48], "dot")] = flops.get((name[:48], "dot"), 0.0) \
+                    + mult * hc._dot_flops(name, inst)
+            is_coll = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+            if is_coll and not op.endswith("-done"):
+                b = _shape_bytes(inst.shape) * (2 if is_coll == "all-reduce" else 1)
+                key = (name[:48], is_coll, inst.shape[:48])
+                coll[key] = coll.get(key, 0.0) + mult * b
+            if top_level and op not in _TRIVIAL:
+                b = 2.0 * hc._effective_out_bytes(name, inst)
+                key = (name[:48], op)
+                mem[key] = mem.get(key, 0.0) + mult * b
+
+    walk(mod.entry, 1.0, True, frozenset())
+    out = {}
+    for label, d in (("collective_bytes", coll), ("hbm_bytes", mem),
+                     ("flops", flops)):
+        out[label] = sorted(d.items(), key=lambda kv: -kv[1])[:top]
+    return out
+
+
+def print_breakdown(text: str, top: int = 12):
+    b = breakdown(text, top)
+    for label, rows in b.items():
+        print(f"--- top {label} ---")
+        for key, v in rows:
+            print(f"  {v:.4g}  {key}")
+    return b

@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct input specs + sharding specs for every
+(architecture × input-shape × mesh) combination — no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import extra_inputs
+from repro.sharding.rules import batch_axes, cache_specs, param_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_spec(mesh) -> P:
+    b = batch_axes(mesh)
+    return P(b if len(b) > 1 else b[0])
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    for k, (shp, dt) in extra_inputs(cfg, B, S).items():
+        out[k] = _sds(shp, dt)
+    return out
+
+
+def train_input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    bs = batch_spec(mesh)
+    out = {"tokens": NamedSharding(mesh, P(*bs, None)),
+           "labels": NamedSharding(mesh, P(*bs, None))}
+    for k in extra_inputs(cfg, shape.global_batch, shape.seq_len):
+        out[k] = NamedSharding(mesh, P(*bs, None, None))
+    return out
+
+
+def decode_inputs(model, cfg: ModelConfig, shape: ShapeConfig,
+                  window_override=None) -> Tuple[Any, Any, Any]:
+    """(cache_shape, tokens, pos) ShapeDtypeStructs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    extras = {k: _sds(shp, dt) for k, (shp, dt) in extra_inputs(cfg, B, S).items()}
+    kw = {}
+    if window_override is not None:
+        kw["window"] = window_override
+    cache = jax.eval_shape(
+        lambda p, ex: model.decode_init(p, B, S, extras=ex, **kw),
+        _params_shape(model), extras)
+    tokens = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return cache, tokens, pos
+
+
+def _params_shape(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def decode_cache_shardings(cache_shape, mesh):
+    specs = cache_specs(cache_shape, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_shardings(state_shape, mesh):
+    """NamedShardings for a {'params','opt'} train state.  Moments follow
+    their parameters, except under ZeRO-1 (replicated weights, data-sharded
+    optimizer state)."""
+    from repro.sharding.rules import get_sharding_policy
+    pol = get_sharding_policy()
+    pspecs = param_specs(state_shape["params"], mesh)
+    mspecs = (param_specs(state_shape["params"], mesh, force_fsdp=True)
+              if pol.get("zero1") else pspecs)
+    ospecs = {
+        "step": P(),
+        "mu": mspecs,
+        "nu": mspecs,
+    }
+    specs = {"params": pspecs, "opt": ospecs}
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def params_shardings(params_shape, mesh):
+    pspecs = param_specs(params_shape, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,295 @@
+"""Step builders: train_step / prefill_step / serve_step per architecture.
+
+The train step computes a sequence-chunked cross-entropy (never
+materialises the full ``[B, S, V]`` logits tensor), per-layer remat happens
+inside the model ``apply``, and AdamW runs on donated state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import build
+from repro.optim import adamw_init, adamw_update, make_schedule
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(hidden, w_unembed, labels, chunk: int):
+    """hidden: [B,S,d]; w_unembed: [d,V]; labels: [B,S] int32 -> mean nll.
+
+    Scans over sequence chunks; each step materialises only [B,chunk,V]
+    (sharded) logits.  Labels < 0 are masked out.
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fallback: odd lengths take one chunk
+    n = S // chunk
+    hc = jnp.moveaxis(hidden.reshape(B, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    def body(acc, xs):
+        h, lab = xs
+        logits = (h @ w_unembed).astype(jnp.float32)           # [B,c,V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        mask = (lab >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * mask
+        return (acc[0] + nll.sum(), acc[1] + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _unembed(model, params):
+    mod_cfg = model.cfg
+    if mod_cfg.tie_embeddings:
+        return params["embed"]["emb"].T
+    return params["unembed"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_state(model, key, tcfg: TrainConfig):
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def train_state_shape(model, tcfg: TrainConfig):
+    return jax.eval_shape(lambda k: make_train_state(model, k, tcfg),
+                          jax.random.PRNGKey(0))
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    model = build(cfg)
+    schedule = make_schedule(tcfg.schedule, tcfg.learning_rate,
+                             tcfg.warmup_steps, tcfg.total_steps)
+
+    def loss_fn(params, batch):
+        extras = {k: batch[k] for k in batch
+                  if k not in ("tokens", "labels")}
+        hidden, aux = model.apply(params, batch["tokens"], extras,
+                                  remat=tcfg.remat, use_pallas=tcfg.use_pallas,
+                                  attn_chunk=tcfg.attn_chunk)
+        loss = chunked_cross_entropy(hidden, _unembed(model, params),
+                                     batch["labels"], tcfg.loss_chunk)
+        if cfg.num_experts:
+            loss = loss + cfg.moe_aux_coef * aux / max(cfg.num_layers, 1)
+        return loss
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        lr = schedule(state["opt"]["step"])
+        new_params, new_opt, m = adamw_update(
+            grads, state["opt"], state["params"], lr=lr,
+            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        metrics = {"loss": loss, "lr": lr, **m}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return model, train_step
+
+
+# ---------------------------------------------------------------------------
+# FL-over-pods train step (the paper's Step 2 as a lowered program)
+# ---------------------------------------------------------------------------
+
+
+def build_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """DR-FL in the multi-pod mapping: every pod (client) trains a
+    depth-prefix submodel of the replicated global model.
+
+    The batch carries ``layer_gates [L, B]`` — per-example submodel masks
+    (constant within a pod's batch shard, so the gate tensor is sharded over
+    the same batch axes as the tokens) and ``layer_counts [L]`` — how many
+    pods train each layer.  Because masked-out layers are exact identities,
+    their parameter gradients vanish for non-training pods; the global
+    batch-mean gradient therefore equals the DR-FL masked SUM over
+    contributing clients divided by the total client count.  Rescaling
+    stacked-layer grads by ``n_clients / count_l`` turns that into the
+    paper's layer-aligned masked MEAN (Eq. 2 generalised) — one jitted
+    program, aggregation happening inside the ordinary gradient psum over
+    the pod axis.  Only the dense/MoE decoder families support per-example
+    gates (DESIGN.md §Arch-applicability)."""
+    model = build(cfg)
+    schedule = make_schedule(tcfg.schedule, tcfg.learning_rate,
+                             tcfg.warmup_steps, tcfg.total_steps)
+
+    def loss_fn(params, batch):
+        hidden, aux = model.apply(params, batch["tokens"], {},
+                                  layer_mask=batch["layer_gates"],
+                                  remat=tcfg.remat, use_pallas=tcfg.use_pallas,
+                                  attn_chunk=tcfg.attn_chunk)
+        loss = chunked_cross_entropy(hidden, _unembed(model, params),
+                                     batch["labels"], tcfg.loss_chunk)
+        if cfg.num_experts:
+            loss = loss + cfg.moe_aux_coef * aux / max(cfg.num_layers, 1)
+        return loss
+
+    def _rescale(grads, counts, n_clients):
+        scale = n_clients / jnp.maximum(counts, 1.0)          # [L]
+
+        def leaf(g):
+            if g.ndim >= 1 and g.shape[0] == cfg.num_layers:
+                return (g.astype(jnp.float32)
+                        * scale.reshape((-1,) + (1,) * (g.ndim - 1))
+                        ).astype(g.dtype)
+            return g
+        return jax.tree.map(leaf, grads)
+
+    def fl_train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        grads = _rescale(grads, batch["layer_counts"],
+                         jnp.float32(batch["n_clients"]))
+        lr = schedule(state["opt"]["step"])
+        new_params, new_opt, m = adamw_update(
+            grads, state["opt"], state["params"], lr=lr,
+            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "lr": lr, **m})
+
+    return model, fl_train_step
+
+
+def build_fl_bucketed_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Beyond-paper optimisation of the FL-over-pods step (§Perf, C-line).
+
+    The masked step (``build_fl_train_step``) COMPUTES every layer for every
+    client and multiplies masked layers by 0 — "useless training" in
+    silicon; its useful-FLOPs ratio is mean(prefix)/L.  Because DR-FL
+    submodels are *depth prefixes* from a fixed exit table, clients can be
+    **statically bucketed by submodel**: the batch arrives bucket-major
+    ([n_exits, B/n_exits, S]) and each bucket scans ONLY its first
+    ``exit_points[b]`` layers (a sliced stacked-param tree — gradients for
+    unsliced layers are exact zeros by construction).  Per-layer gradient
+    rescaling to the DR-FL masked mean uses the static exit table.  No
+    retracing across rounds: the dispatch order changes, the bucket shapes
+    don't."""
+    from repro.core.layerwise import exit_points
+    model = build(cfg)
+    schedule = make_schedule(tcfg.schedule, tcfg.learning_rate,
+                             tcfg.warmup_steps, tcfg.total_steps)
+    exits = list(exit_points(cfg))
+    nb = len(exits)
+    L = cfg.num_layers
+    # static per-layer coverage counts
+    counts = [sum(1 for k in exits if l < k) for l in range(L)]
+
+    def _slice_blocks(params, k):
+        import dataclasses as _dc
+        sliced = dict(params)
+        sliced["blocks"] = jax.tree.map(lambda a: a[:k], params["blocks"])
+        return sliced, _dc.replace(cfg, num_layers=k)
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]                # [nb, B/nb, S]
+        labels = batch["labels"]
+        total = 0.0
+        from repro.models import transformer as T
+        for b, k in enumerate(exits):
+            sub, cfg_b = _slice_blocks(params, k)
+            hidden, _ = T.apply(sub, cfg_b, tokens[b], remat=tcfg.remat,
+                                use_pallas=tcfg.use_pallas,
+                                attn_chunk=tcfg.attn_chunk)
+            total = total + chunked_cross_entropy(
+                hidden, _unembed(model, params), labels[b], tcfg.loss_chunk)
+        return total / nb
+
+    def _rescale(grads):
+        scale = jnp.asarray([nb / max(c, 1) for c in counts], jnp.float32)
+
+        def leaf(g):
+            if g.ndim >= 1 and g.shape[0] == L:
+                return (g.astype(jnp.float32)
+                        * scale.reshape((-1,) + (1,) * (g.ndim - 1))
+                        ).astype(g.dtype)
+            return g
+        return jax.tree.map(leaf, grads)
+
+    def fl_train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        grads = _rescale(grads)
+        lr = schedule(state["opt"]["step"])
+        new_params, new_opt, m = adamw_update(
+            grads, state["opt"], state["params"], lr=lr,
+            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "lr": lr, **m})
+
+    return model, fl_train_step, nb
+
+
+def fl_batch_extras(cfg: ModelConfig, shape: ShapeConfig, n_clients: int = 4):
+    """ShapeDtypeStructs for the FL-step extra inputs."""
+    import jax.numpy as jnp
+    B = shape.global_batch
+    return {
+        "layer_gates": jax.ShapeDtypeStruct((cfg.num_layers, B), jnp.float32),
+        "layer_counts": jax.ShapeDtypeStruct((cfg.num_layers,), jnp.float32),
+        "n_clients": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    """Batched scoring/prefill: forward pass + last-position logits."""
+    model = build(cfg)
+    tcfg = tcfg or TrainConfig()
+
+    def prefill_step(params, batch):
+        extras = {k: batch[k] for k in batch if k != "tokens"}
+        hidden, _ = model.apply(params, batch["tokens"], extras,
+                                remat="none", use_pallas=tcfg.use_pallas,
+                                attn_chunk=tcfg.attn_chunk)
+        return model.logits(params, hidden[:, -1:, :])
+
+    return model, prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, window_override: Optional[int] = None):
+    """One-token greedy decode with a persistent cache (donated)."""
+    model = build(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        kw = {}
+        if window_override is not None:
+            kw["window"] = window_override
+        logits, new_cache = model.decode_step(params, cache, tokens, pos, **kw)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return model, serve_step
+
+
+# ---------------------------------------------------------------------------
+# long-context handling
+# ---------------------------------------------------------------------------
+
+
+def adapt_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Auto-enable the SWA long-context variant for full-attention archs on
+    ``long_500k`` (documented deviation — DESIGN.md §5)."""
+    full_attn = cfg.family in ("dense", "moe", "vlm", "audio") and cfg.window == 0
+    if shape.name == "long_500k" and full_attn:
+        return dataclasses.replace(cfg, window=8192)
+    return cfg

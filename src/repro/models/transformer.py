@@ -1,0 +1,164 @@
+"""Dense / MoE decoder-only transformer with scan-over-layers stacked params.
+
+Used directly by yi-34b, phi3-mini, minitron, command-r (dense) and
+qwen3-moe, mixtral (moe).  The VLM/audio models build on the same block.
+
+DR-FL integration: ``apply`` takes ``layer_mask`` — a float ``[L]`` vector
+multiplying every block's residual delta, so a depth-prefix submodel
+(paper §4.2) is simply ``mask = [1]*k + [0]*(L-k)`` with *no* retracing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.rules import constrain, gather_block_input
+from repro.models.moe import moe_apply, moe_init
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attention_init(ks[0], cfg, dtype),
+        "mlp_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.num_experts:
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype, bias=cfg.mlp_bias)
+    return p
+
+
+def block_apply(p, cfg, x, positions, gate, *, window=None, use_pallas=False,
+                attn_chunk=0, cache=None):
+    """One pre-norm residual block.  Returns (x, new_cache, aux_loss)."""
+    window = cfg.window if window is None else window
+    x = gather_block_input(x)
+    h = L.rmsnorm_apply(p["attn_norm"], x, cfg.norm_eps)
+    a, new_cache = L.attention_apply(
+        p["attn"], cfg, h, positions, causal=True, window=window,
+        cache=cache, use_pallas=use_pallas, attn_chunk=attn_chunk,
+        norm_eps=cfg.norm_eps)
+    x = x + gate * a
+    h = L.rmsnorm_apply(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        m, aux = moe_apply(p["moe"], cfg, h)
+    else:
+        m, aux = L.swiglu_apply(p["mlp"], h), jnp.zeros((), jnp.float32)
+    x = x + gate * m
+    return x, new_cache, aux
+
+
+def init(key, cfg):
+    dtype = _dt(cfg)
+    k_emb, k_blocks, k_out = jax.random.split(key, 3)
+    params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": jax.vmap(lambda k: block_init(k, cfg, dtype))(
+            jax.random.split(k_blocks, cfg.num_layers)),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["emb"].T
+    return params["unembed"]["w"]
+
+
+def _remat_wrap(fn, mode):
+    if mode == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if mode == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def apply(params, cfg, tokens, *, layer_mask=None, window=None,
+          use_pallas=False, attn_chunk=0, remat="full"):
+    """tokens: [B, S] int32 -> (hidden [B, S, d], aux_loss scalar).
+
+    ``layer_mask`` is either ``[L]`` (one submodel for the whole batch) or
+    ``[L, B]`` (per-example depth-prefix gates — the FL-over-pods step feeds
+    each pod's submodel mask through the batch dimension).
+
+    Final logits are intentionally NOT computed here — the train step uses a
+    sequence-chunked cross-entropy to avoid materialising [B, S, V].
+    """
+    B, S = tokens.shape
+    x = constrain(params["embed"]["emb"][tokens])
+    positions = jnp.arange(S)
+    mask = (jnp.ones((cfg.num_layers,), jnp.float32)
+            if layer_mask is None else layer_mask.astype(jnp.float32))
+
+    def body(carry, scanned):
+        x, aux = carry
+        bp, gate = scanned
+        g = gate if gate.ndim == 0 else gate[:, None, None]   # [B]->[B,1,1]
+        x, _, a = block_apply(bp, cfg, x, positions, g.astype(x.dtype),
+                              window=window, use_pallas=use_pallas,
+                              attn_chunk=attn_chunk)
+        return (constrain(x), aux + gate.mean() * a), None
+
+    body = _remat_wrap(body, remat)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (params["blocks"], mask))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_fn(params, cfg, hidden):
+    return (hidden @ unembed_matrix(params, cfg)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def decode_cache_len(cfg, seq_len: int) -> int:
+    """SWA models keep a ring-sized window cache; full attention keeps all."""
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def decode_init(params, cfg, batch: int, seq_len: int, *, window=None):
+    w = cfg.window if window is None else window
+    clen = min(seq_len, w) if w else seq_len
+    dtype = _dt(cfg)
+    Lr, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((Lr, batch, clen, Hkv, hd), dtype),
+        "v": jnp.zeros((Lr, batch, clen, Hkv, hd), dtype),
+        "pos": jnp.zeros((Lr,), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, layer_mask=None, window=None):
+    """tokens: [B, 1]; pos: scalar int32 absolute position.
+
+    Returns (logits [B, 1, V], new_cache).
+    """
+    x = params["embed"]["emb"][tokens]
+    mask = (jnp.ones((cfg.num_layers,), jnp.float32)
+            if layer_mask is None else layer_mask.astype(jnp.float32))
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+
+    def body(x, scanned):
+        bp, c, gate = scanned
+        # cache-relative write position (ring-free: clamp to cache length)
+        y, new_c, _ = block_apply(bp, cfg, x, positions, gate.astype(x.dtype),
+                                  window=window, cache=c)
+        return y, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache, mask))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache

@@ -1,0 +1,339 @@
+"""xLSTM backbone (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+* Even blocks: **mLSTM** — per-head matrix memory ``C ∈ R^{P×P}`` with
+  exponential input gate and sigmoid forget gate; trained with the
+  **chunkwise-parallel** stabilised algorithm (linear in sequence length),
+  decoded with the O(1)-state recurrent step.
+* Odd blocks: **sLSTM** — scalar memory with block-diagonal (per-head)
+  recurrent weights and exponential-gating max-stabiliser; `lax.scan` over
+  time (non-associative recurrence, cannot be parallelised).
+
+Assignment note: ``d_ff=0`` — blocks carry internal up/down projections
+(mLSTM projection factor 2; sLSTM gated FFN factor 4/3), per the paper's
+block design.
+
+Stacking: ``lax.scan`` over L/2 (mLSTM, sLSTM) pairs of stacked params.
+DR-FL ``layer_mask`` has length ``num_layers`` and is consumed pairwise.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.rules import constrain
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "norm": L.rmsnorm_init(d, dtype),
+        "w_up": L._normal(ks[0], (d, 2 * inner), s, dtype),       # u ++ z(gate)
+        "wq": L._normal(ks[1], (inner, inner), 1.0 / math.sqrt(inner), dtype),
+        "wk": L._normal(ks[2], (inner, inner), 1.0 / math.sqrt(inner), dtype),
+        "wv": L._normal(ks[3], (inner, inner), 1.0 / math.sqrt(inner), dtype),
+        "w_if": L._normal(ks[4], (d, 2 * H), s, jnp.float32),      # i, f gate logits
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "out_norm": L.rmsnorm_init(inner, dtype),
+        "w_down": L._normal(ks[5], (inner, d), 1.0 / math.sqrt(inner), dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk, state=None):
+    """Stabilised chunkwise mLSTM.
+
+    q,k,v: [B, H, S, P]; log_i/log_f: [B, H, S].
+    Returns y [B, H, S, P] and final (C [B,H,P,P], n [B,H,P], m [B,H]).
+    """
+    B, H, S, P = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nC = S // Q
+
+    qc = jnp.moveaxis(q.reshape(B, H, nC, Q, P), 2, 0)       # [nC, B, H, Q, P]
+    kc = jnp.moveaxis(k.reshape(B, H, nC, Q, P), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, H, nC, Q, P), 2, 0)
+    lic = jnp.moveaxis(log_i.reshape(B, H, nC, Q), 2, 0)     # [nC, B, H, Q]
+    lfc = jnp.moveaxis(log_f.reshape(B, H, nC, Q), 2, 0)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, P, P), jnp.float32)
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def body(carry, xs):
+        C, n, m = carry
+        qb, kb, vb, li, lf = xs
+        qb, kb, vb = (t.astype(jnp.float32) for t in (qb, kb, vb))
+        b = jnp.cumsum(lf, axis=-1)                          # [B,H,Q] inclusive
+        total = b[..., -1]                                   # [B,H]
+        # per-position intra log weights: a_ij = b_i - b_j + li_j  (j<=i)
+        aij = b[..., :, None] - b[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        aij = jnp.where(tri, aij, -jnp.inf)
+        inter_log = m[..., None] + b                         # [B,H,Q]
+        m_i = jnp.maximum(inter_log, jnp.max(aij, axis=-1))  # [B,H,Q]
+        m_i = jnp.maximum(m_i, -1e30)
+        w_intra = jnp.exp(aij - m_i[..., None])              # [B,H,Q,Q]
+        w_inter = jnp.exp(inter_log - m_i)                   # [B,H,Q]
+        scale = 1.0 / math.sqrt(P)
+        s_ij = jnp.einsum("bhip,bhjp->bhij", qb * scale, kb) * w_intra
+        num = jnp.einsum("bhij,bhjp->bhip", s_ij, vb)
+        num += w_inter[..., None] * jnp.einsum("bhip,bhpq->bhiq", qb * scale, C)
+        den = jnp.sum(s_ij, axis=-1)
+        den += w_inter * jnp.einsum("bhip,bhp->bhi", qb * scale, n)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # state update to end of chunk
+        m_new = jnp.maximum(m + total, jnp.max(total[..., None] - b + li, axis=-1))
+        w_old = jnp.exp(m + total - m_new)                   # [B,H]
+        w_j = jnp.exp(total[..., None] - b + li - m_new[..., None])  # [B,H,Q]
+        C_new = w_old[..., None, None] * C + jnp.einsum("bhj,bhjp,bhjq->bhpq", w_j, kb, vb)
+        n_new = w_old[..., None] * n + jnp.einsum("bhj,bhjp->bhp", w_j, kb)
+        return (C_new, n_new, m_new), y
+
+    (C, n, m), ys = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, S, P)           # [B,H,S,P]
+    return y, (C, n, m)
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single recurrent step.  q,k,v: [B,H,P]; gates [B,H]."""
+    C, n, m = state
+    P = q.shape[-1]
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    scale = 1.0 / math.sqrt(P)
+    num = jnp.einsum("bhp,bhpq->bhq", q * scale, C)
+    den = jnp.einsum("bhp,bhp->bh", q * scale, n)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return y, (C, n, m_new)
+
+
+def _mlstm_pre(p, cfg, x):
+    """Shared projections.  x: [B,S,d] -> q,k,v [B,H,S,P], gates, z-gate."""
+    B, S, d = x.shape
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    P = inner // H
+    h = L.rmsnorm_apply(p["norm"], x, cfg.norm_eps)
+    up = h @ p["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)                          # [B,S,inner] each
+    q = (u @ p["wq"]).reshape(B, S, H, P).transpose(0, 2, 1, 3)
+    k = (u @ p["wk"]).reshape(B, S, H, P).transpose(0, 2, 1, 3)
+    v = (u @ p["wv"]).reshape(B, S, H, P).transpose(0, 2, 1, 3)
+    gl = (h.astype(jnp.float32) @ p["w_if"]) + p["b_if"]      # [B,S,2H]
+    i_raw, f_raw = jnp.split(gl, 2, axis=-1)
+    log_i = jnp.transpose(i_raw, (0, 2, 1))                   # [B,H,S]
+    log_f = jnp.transpose(jax.nn.log_sigmoid(f_raw), (0, 2, 1))
+    return q, k, v, log_i, log_f, z, (B, S, inner, H, P)
+
+
+def mlstm_apply(p, cfg, x, state=None):
+    q, k, v, log_i, log_f, z, (B, S, inner, H, P) = _mlstm_pre(p, cfg, x)
+    y, new_state = _mlstm_chunk_scan(q, k, v, log_i, log_f, cfg.ssm_chunk, state)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, inner).astype(x.dtype)
+    y = L.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_down"], new_state
+
+
+def mlstm_decode(p, cfg, x, state):
+    """x: [B,1,d]."""
+    q, k, v, log_i, log_f, z, (B, S, inner, H, P) = _mlstm_pre(p, cfg, x)
+    y, new_state = mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                              log_i[:, :, 0], log_f[:, :, 0], state)
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = L.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_down"], new_state
+
+
+def mlstm_state_init(cfg, batch):
+    inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    P = inner // H
+    return (jnp.zeros((batch, H, P, P), jnp.float32),
+            jnp.zeros((batch, H, P), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    f = max(1, int(d * 4 / 3) // 8 * 8)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "norm": L.rmsnorm_init(d, dtype),
+        "w_in": L._normal(ks[0], (d, 4 * d), s, dtype),           # z,i,f,o pre-acts
+        "r": L._normal(ks[1], (H, P, 4 * P), 1.0 / math.sqrt(P), jnp.float32),
+        "b": jnp.tile(jnp.concatenate(
+            [jnp.zeros((d,)), jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]), (1,)).astype(jnp.float32),
+        "out_norm": L.rmsnorm_init(d, dtype),
+        "ffn": L.swiglu_init(ks[2], d, f, dtype),
+    }
+
+
+def _slstm_cell(gates_x, r, h, c, n, m, H, P):
+    """One sLSTM step.  gates_x: [B, 4d] input pre-activations."""
+    B = gates_x.shape[0]
+    hr = h.reshape(B, H, P)
+    rec = jnp.einsum("bhp,hpq->bhq", hr, r).reshape(B, 4 * H * P)
+    z_r, i_r, f_r, o_r = jnp.split(gates_x + rec, 4, axis=-1)
+    log_i = i_r
+    log_f = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_apply(p, cfg, x, state=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    P = d // H
+    hin = L.rmsnorm_apply(p["norm"], x, cfg.norm_eps)
+    gx = (hin.astype(jnp.float32) @ p["w_in"].astype(jnp.float32)) + p["b"]  # [B,S,4d]
+    if state is None:
+        state = slstm_state_init(cfg, B)
+    h0, c0, n0, m0 = state
+
+    def body(carry, gxt):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(gxt, p["r"], h, c, n, m, H, P)
+        return (h, c, n, m), h
+
+    (h, c, n, m), hs = jax.lax.scan(body, (h0, c0, n0, m0), jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                # [B,S,d]
+    y = L.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps)
+    return L.swiglu_apply(p["ffn"], y), (h, c, n, m)
+
+
+def slstm_decode(p, cfg, x, state):
+    B, S, d = x.shape
+    H, P = cfg.num_heads, d // cfg.num_heads
+    hin = L.rmsnorm_apply(p["norm"], x, cfg.norm_eps)
+    gx = (hin.astype(jnp.float32) @ p["w_in"].astype(jnp.float32)) + p["b"]
+    h, c, n, m = _slstm_cell(gx[:, 0], p["r"], *state, H, P)
+    y = h[:, None, :].astype(x.dtype)
+    y = L.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps)
+    return L.swiglu_apply(p["ffn"], y), (h, c, n, m)
+
+
+def slstm_state_init(cfg, batch):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg):
+    dtype = _dt(cfg)
+    assert cfg.num_layers % 2 == 0
+    npairs = cfg.num_layers // 2
+    k_emb, k_m, k_s, k_out = jax.random.split(key, 4)
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "mlstm": jax.vmap(lambda k: mlstm_init(k, cfg, dtype))(jax.random.split(k_m, npairs)),
+        "slstm": jax.vmap(lambda k: slstm_init(k, cfg, dtype))(jax.random.split(k_s, npairs)),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "unembed": L.dense_init(k_out, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def unembed_matrix(params, cfg):
+    return params["unembed"]["w"]
+
+
+def apply(params, cfg, tokens, *, layer_mask=None, window=None,
+          use_pallas=False, attn_chunk=0, remat="full"):
+    B, S = tokens.shape
+    x = constrain(params["embed"]["emb"][tokens])
+    npairs = cfg.num_layers // 2
+    mask = (jnp.ones((cfg.num_layers,), jnp.float32)
+            if layer_mask is None else layer_mask.astype(jnp.float32))
+    mask = mask.reshape(npairs, 2)
+
+    def body(x, scanned):
+        mp, sp, gate = scanned
+        dm, _ = mlstm_apply(mp, cfg, x)
+        x = x + gate[0].astype(x.dtype) * dm
+        ds, _ = slstm_apply(sp, cfg, x)
+        x = x + gate[1].astype(x.dtype) * ds
+        return constrain(x), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"], mask))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def logits_fn(params, cfg, hidden):
+    return (hidden @ unembed_matrix(params, cfg)).astype(jnp.float32)
+
+
+def decode_init(params, cfg, batch: int, seq_len: int, *, window=None):
+    npairs = cfg.num_layers // 2
+
+    def stack(make):
+        st = make(cfg, batch)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (npairs,) + a.shape), st)
+
+    return {"mlstm": stack(mlstm_state_init), "slstm": stack(slstm_state_init),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, layer_mask=None, window=None):
+    x = params["embed"]["emb"][tokens]
+    npairs = cfg.num_layers // 2
+    mask = (jnp.ones((cfg.num_layers,), jnp.float32)
+            if layer_mask is None else layer_mask.astype(jnp.float32)).reshape(npairs, 2)
+
+    def body(x, scanned):
+        mp, sp, ms, ss, gate = scanned
+        dm, ms = mlstm_decode(mp, cfg, x, ms)
+        x = x + gate[0].astype(x.dtype) * dm
+        ds, ss = slstm_decode(sp, cfg, x, ss)
+        x = x + gate[1].astype(x.dtype) * ds
+        return x, (ms, ss)
+
+    x, (ms, ss) = jax.lax.scan(
+        body, x, (params["mlstm"], params["slstm"], cache["mlstm"], cache["slstm"], mask))
+    new_cache = {"mlstm": ms, "slstm": ss, "pos": cache["pos"] + 1}
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache

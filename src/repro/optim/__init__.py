@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, global_norm,
+                                    sgd_init, sgd_update)  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401

@@ -1,0 +1,110 @@
+"""Pure-JAX optimizers (pytree-level AdamW and SGD+momentum).
+
+Conventions:
+* params may be bf16 (full-scale runs) or fp32 (smoke tests); AdamW moments
+  are kept fp32 and the update math happens in fp32 regardless.
+* ``update`` takes the already-scaled learning rate (schedules are applied by
+  the caller via :func:`repro.optim.make_schedule`).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Pytree, moment_dtype=jnp.float32) -> Pytree:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(grads: Pytree, state: Pytree, params: Pytree, *,
+                 lr, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.0,
+                 grad_clip: float = 0.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if grad_clip:
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+    else:
+        scale = jnp.ones((), jnp.float32)
+    step = state["step"] + 1
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = beta1 * m + (1.0 - beta1) * g
+        v = beta2 * v + (1.0 - beta2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        pf = p.astype(jnp.float32)
+        step_ = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay and p.ndim >= 2:   # decoupled decay, matrices only
+            step_ = step_ + weight_decay * pf
+        return (pf - lr * step_).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "mu": new_m, "nu": new_v}, {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum) — used by FL clients (paper: lr 0.05 SGD)
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params: Pytree, momentum: float = 0.0) -> Pytree:
+    if momentum == 0.0:
+        return {"step": jnp.zeros((), jnp.int32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "vel": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+
+def sgd_update(grads: Pytree, state: Pytree, params: Pytree, *,
+               lr, momentum: float = 0.0, grad_clip: float = 0.0):
+    gnorm = global_norm(grads)
+    scale = (jnp.minimum(1.0, grad_clip / (gnorm + 1e-9)) if grad_clip
+             else jnp.ones((), jnp.float32))
+    step = state["step"] + 1
+    if momentum == 0.0:
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32) * scale).astype(p.dtype),
+            params, grads)
+        return new_p, {"step": step}, {"grad_norm": gnorm}
+    new_v = jax.tree.map(
+        lambda v, g: momentum * v + g.astype(jnp.float32) * scale,
+        state["vel"], grads)
+    new_p = jax.tree.map(
+        lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+        params, new_v)
+    return new_p, {"step": step, "vel": new_v}, {"grad_norm": gnorm}

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, warmup_steps: int, total_steps: int):
+    warmup_steps = max(1, warmup_steps)
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = (s + 1.0) / warmup_steps   # nonzero LR at step 0
+        if kind == "constant":
+            decay = jnp.ones_like(s)
+        elif kind == "linear":
+            frac = (s - warmup_steps) / max(1, total_steps - warmup_steps)
+            decay = jnp.clip(1.0 - frac, 0.0, 1.0)
+        elif kind == "cosine":
+            frac = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            raise ValueError(f"unknown schedule {kind!r}")
+        return base_lr * jnp.where(s < warmup_steps, warm, decay)
+
+    return fn

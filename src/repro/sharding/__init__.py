@@ -1,0 +1,3 @@
+from repro.sharding.rules import (activation_spec, batch_axes, cache_specs,
+                                  constrain, param_specs, set_activation_mesh,
+                                  spec_for)  # noqa: F401

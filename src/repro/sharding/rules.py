@@ -1,0 +1,353 @@
+"""Name-based sharding rules with divisibility fallback.
+
+Logical axes are inferred from parameter *path suffixes* (the same names the
+model modules use); each logical axis maps to a mesh axis through
+:data:`LOGICAL_TO_MESH`.  Rules silently fall back to replication when a
+dimension is not divisible by the mesh-axis size — this is what lets one rule
+table cover all ten assigned architectures (e.g. mixtral's 8 experts cannot
+shard over a 16-way model axis, so its experts replicate and the expert FFN
+width shards instead).
+
+The batch ("data-parallel") axes are ``("pod", "data")`` on the multi-pod
+mesh and ``("data",)`` on the single-pod mesh; weights are FSDP-sharded over
+``data`` only (each pod holds the full FSDP shard group — this is the FL
+mapping: pods are DR-FL clients and exchange weights by layer-aligned
+aggregation over the ``pod`` axis).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --- logical-axis rule table -------------------------------------------------
+# suffix regex -> logical axes of the *base* (unstacked) param shape,
+# rightmost dims.  Leading stacked layer/group dims are padded with None.
+RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    (r"embed/emb$",                    ("vocab", "embed")),
+    (r"unembed/w$",                    ("embed", "vocab")),
+    (r"attn/w[qkv]/w$",                ("embed", "heads")),
+    (r"cross/w[qkv]/w$",               ("embed", "heads")),
+    (r"attn/wo/w$",                    ("heads", "embed")),
+    (r"cross/wo/w$",                   ("heads", "embed")),
+    (r"moe/router$",                   ("embed", None)),
+    (r"moe/w_gate$",                   ("expert", "embed", "mlp")),
+    (r"moe/w_up$",                     ("expert", "embed", "mlp")),
+    (r"moe/w_down$",                   ("expert", "mlp", "embed")),
+    (r"(mlp|ffn)/w_gate/w$",           ("embed", "mlp")),
+    (r"(mlp|ffn)/w_up/w$",             ("embed", "mlp")),
+    (r"(mlp|ffn)/w_down/w$",           ("mlp", "embed")),
+    (r"(mlp|ffn)/w_in/w$",             ("embed", "mlp")),
+    (r"(mlp|ffn)/w_out/w$",            ("mlp", "embed")),
+    (r"w_up$",                         ("embed", "mlp")),      # xlstm mLSTM up
+    (r"w_down$",                       ("mlp", "embed")),
+    (r"w_in$",                         ("embed", "mlp")),      # mamba / slstm in
+    (r"w_out$",                        ("mlp", "embed")),
+    (r"wq$",                           ("mlp", "heads")),      # xlstm q/k/v (inner,inner)
+    (r"wk$",                           ("mlp", "heads")),
+    (r"wv$",                           ("mlp", "heads")),
+    # sLSTM recurrent weights: REPLICATED.  They are small (4M params x L/2)
+    # but live inside the 4096-step time scan — sharding them made GSPMD
+    # all-reduce their gradient every step of the backward scan (206 GB/step
+    # measured on xlstm train_4k; §Perf X6).
+    (r"/r$",                           (None, None, None)),
+)
+
+LOGICAL_TO_MESH = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "embed": ("data",),     # ZeRO/FSDP axis
+}
+
+# --- sharding policy (perf-iteration knobs; see EXPERIMENTS.md §Perf) --------
+# fsdp=False        -> weights replicated over 'data' (pure TP+DP): removes
+#                      the per-layer weight all-gathers inside the scan at the
+#                      cost of per-device weight memory.
+# act_model=False   -> residual stream replicated over 'model' (no
+#                      sequence-parallel style activation all-gathers; GSPMD
+#                      chooses where to partition attention/MLP internals).
+_POLICY = {"fsdp": True, "act_model": True, "repeat_kv": False,
+           "zero1": False, "attn_seq": False, "attn_heads": False, "act_seq": False, "block_gather": False,
+           "dp2d": False}
+
+
+def set_sharding_policy(*, fsdp: Optional[bool] = None,
+                        act_model: Optional[bool] = None,
+                        repeat_kv: Optional[bool] = None,
+                        zero1: Optional[bool] = None,
+                        attn_seq: Optional[bool] = None,
+                        attn_heads: Optional[bool] = None,
+                        act_seq: Optional[bool] = None,
+                        block_gather: Optional[bool] = None,
+                        dp2d: Optional[bool] = None):
+    """repeat_kv: materialise repeated KV heads inside attention so GSPMD
+    shards the (padded) Q-head axis instead of partially contracting the
+    indivisible KV-head axis (which all-reduces full score tensors).
+    zero1: with fsdp=False, keep optimizer moments sharded over 'data'
+    (ZeRO-1) — replicated weights, sharded optimizer state."""
+    if fsdp is not None:
+        _POLICY["fsdp"] = fsdp
+    if act_model is not None:
+        _POLICY["act_model"] = act_model
+    if repeat_kv is not None:
+        _POLICY["repeat_kv"] = repeat_kv
+    if zero1 is not None:
+        _POLICY["zero1"] = zero1
+    if attn_seq is not None:
+        _POLICY["attn_seq"] = attn_seq
+    if attn_heads is not None:
+        _POLICY["attn_heads"] = attn_heads
+    if act_seq is not None:
+        _POLICY["act_seq"] = act_seq
+    if block_gather is not None:
+        _POLICY["block_gather"] = block_gather
+    if dp2d is not None:
+        _POLICY["dp2d"] = dp2d
+
+
+def get_sharding_policy():
+    return dict(_POLICY)
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the global batch.
+
+    Under the ``dp2d`` policy the model axis joins the batch axes: with
+    global_batch >= #devices every device holds whole sequences, attention
+    and MLP matmuls are fully local, and the only collectives left are the
+    per-layer weight/output gathers + gradient reduce-scatters (ZeRO-3-like
+    streaming over the model axis).  See EXPERIMENTS.md §Perf (yi-34b)."""
+    if _POLICY.get("dp2d"):
+        # batch covers (data x model); the pod axis stays a pure replication
+        # /aggregation axis (in the FL mapping each pod-client sees its own
+        # global batch and aggregates over 'pod')
+        return tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _mesh_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(path: str, shape, mesh: Mesh, force_fsdp: bool = False) -> P:
+    """PartitionSpec for one param leaf. 1-D/0-D params replicate."""
+    if len(shape) <= 1:
+        return P()
+    for pat, logical in RULES:
+        if re.search(pat, path):
+            base = list(logical)
+            ndim = len(shape)
+            pad = ndim - len(base)
+            if pad < 0:           # shape smaller than rule (shouldn't happen)
+                return P()
+            axes = [None] * pad + base
+            out, used = [], set()
+            for dim, name in zip(shape, axes):
+                if name is None:
+                    out.append(None)
+                    continue
+                if name == "embed" and not (_POLICY["fsdp"] or force_fsdp):
+                    out.append(None)
+                    continue
+                mesh_axes = LOGICAL_TO_MESH.get(name, ())
+                if (mesh_axes and not (set(mesh_axes) & used)
+                        and dim % _mesh_size(mesh, mesh_axes) == 0):
+                    used.update(mesh_axes)
+                    out.append(mesh_axes[0] if len(mesh_axes) == 1 else tuple(mesh_axes))
+                else:
+                    out.append(None)
+            return P(*out)
+    return P()
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, mesh: Mesh, force_fsdp: bool = False):
+    """pytree of PartitionSpec matching a params (shape-)pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: spec_for(_path_str(kp), leaf.shape, mesh, force_fsdp),
+        params_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh):
+    """Decode-cache shardings.
+
+    KV caches are [..., batch, seq, kv_heads, head_dim]; recurrent states are
+    [..., batch, heads, ...].  Strategy: shard batch over the data axes when
+    divisible; then kv_heads over 'model' when divisible, else the seq dim.
+    """
+    b_axes = batch_axes(mesh)
+    b_size = _mesh_size(mesh, b_axes)
+    m_size = mesh.shape["model"]
+
+    def leaf_spec(kp, leaf):
+        path = _path_str(kp)
+        shape = leaf.shape
+        if leaf.ndim <= 1 or path.endswith("pos"):
+            return P()
+        # locate the batch dim: first dim (after stacked prefixes) whose size
+        # matches heuristics is fragile — instead use known layouts:
+        # kv caches: (..., B, S, H, D); ssm/conv states: (L?, B, ...)
+        out = [None] * leaf.ndim
+        if path == "k" or path == "v" or path.endswith("/k") or path.endswith("/v"):
+            bdim, sdim, hdim = leaf.ndim - 4, leaf.ndim - 3, leaf.ndim - 2
+            ddim = leaf.ndim - 1
+            if shape[bdim] % b_size == 0 and shape[bdim] >= b_size:
+                out[bdim] = b_axes if len(b_axes) > 1 else b_axes[0]
+            if shape[hdim] % m_size == 0:
+                out[hdim] = "model"
+            elif shape[sdim] % m_size == 0:
+                # seq-dim sharding: GSPMD select-rewrites the local cache
+                # shard on every dynamic write (~612 GB/step measured on
+                # qwen3 decode_32k) but still beats head_dim sharding, whose
+                # per-layer f32 score all-reduces cost more (1.2s vs 0.79s —
+                # §Perf iteration B2, refuted hypothesis kept for the record)
+                out[sdim] = "model"
+            elif shape[ddim] % m_size == 0:
+                out[ddim] = "model"
+        else:
+            # recurrent / conv states: (stack?, B, H or C, ...)
+            bdim = 1 if leaf.ndim >= 3 else 0
+            if shape[bdim] % b_size == 0 and shape[bdim] >= b_size:
+                out[bdim] = b_axes if len(b_axes) > 1 else b_axes[0]
+            for d in range(bdim + 1, leaf.ndim):
+                if shape[d] % m_size == 0:
+                    out[d] = "model"
+                    break
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+# --- activation sharding constraint (set by the step builder) ----------------
+
+_ctx = threading.local()
+
+
+def set_activation_mesh(mesh: Optional[Mesh], model_axis_ok: bool = True):
+    """Install the mesh used by :func:`constrain` inside model code.
+
+    ``model_axis_ok=False`` disables sharding the feature dim (e.g. decode
+    steps where the residual stream is tiny)."""
+    _ctx.mesh = mesh
+    _ctx.model_ok = model_axis_ok
+
+
+def activation_spec(mesh: Mesh, ndim: int, model_ok: bool = True) -> P:
+    b = batch_axes(mesh)
+    spec = [None] * ndim
+    spec[0] = b if len(b) > 1 else b[0]
+    if model_ok and ndim >= 3:
+        if _POLICY.get("dp2d"):
+            pass                   # model axis already consumed by the batch
+        elif _POLICY.get("act_seq"):
+            spec[1] = "model"      # Megatron-style sequence parallelism
+        else:
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def constrain_spec(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    """Apply an explicit PartitionSpec constraint if a mesh is installed."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def gather_block_input(x):
+    """Manual sequence-parallel boundary: all-gather the bf16 residual to
+    full feature width ONCE at block entry.  Without this, the SPMD
+    partitioner gathers the norm's f32 UPCAST (2x the bytes) — and does it
+    separately for the attention and MLP branches."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None or not _POLICY.get("block_gather") or x.ndim != 3:
+        return x
+    b = batch_axes(mesh)
+    return constrain_spec(x, P(b if len(b) > 1 else b[0], None, None))
+
+
+def attn_head_shard(q, k, v):
+    """Head-axis attention sharding with GSPMD padding: constrain Q and the
+    (repeated) KV to P(batch, None, 'model', None) on the head axis.  For
+    head counts that do not divide the model axis (yi-34b: 56 on 16) GSPMD
+    pads rather than falling back to the partial-contraction layout that
+    all-reduces full score tensors.  Use together with repeat_kv."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None or not _POLICY.get("attn_heads"):
+        return q, k, v
+    if q.shape[1] <= 1:
+        return q, k, v
+    b = batch_axes(mesh)
+    bspec = b if len(b) > 1 else b[0]
+    q = constrain_spec(q, P(bspec, None, "model", None))
+    if _POLICY.get("repeat_kv") and q.shape[2] != k.shape[2]:
+        return q, k, v   # repeat happens inside gqa_attend; constrain there
+    k = constrain_spec(k, P(bspec, None, "model", None))
+    v = constrain_spec(v, P(bspec, None, "model", None))
+    return q, k, v
+
+
+def attn_seq_shard(q, k, v):
+    """Context-parallel attention sharding: Q over ('model', sequence), KV
+    replicated on the model axis.  Rationale (yi-34b: 56 heads on a 16-way
+    model axis): GSPMD cannot shard an indivisible head axis, falls back to
+    2-D (head x head_dim) sharding, and partially contracts head_dim —
+    ALL-REDUCING full [Sq,Sk] f32 score tensors.  Sequence-sharding the
+    queries makes every score/output tensor cleanly partitioned; the price
+    is one KV all-gather per layer (Hkv * hd * S bytes — 3 orders of
+    magnitude smaller).  Applied only when the policy flag is on and shapes
+    divide."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None or not _POLICY.get("attn_seq"):
+        return q, k, v
+    m = mesh.shape["model"]
+    if q.shape[1] % m or q.shape[1] < m:
+        return q, k, v
+    b = batch_axes(mesh)
+    bspec = b if len(b) > 1 else b[0]
+    q = constrain_spec(q, P(bspec, "model", None, None))
+    k = constrain_spec(k, P(bspec, None, None, None))
+    v = constrain_spec(v, P(bspec, None, None, None))
+    return q, k, v
+
+
+def constrain(x: jnp.ndarray) -> jnp.ndarray:
+    """Residual-stream sharding constraint: [B, S, d] -> (batch, None, model).
+
+    No-op unless a mesh was installed via :func:`set_activation_mesh` —
+    models call this unconditionally; single-device tests pay nothing.
+    """
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None or x.ndim < 2:
+        return x
+    model_ok = getattr(_ctx, "model_ok", True) and _POLICY["act_model"]
+    spec = activation_spec(mesh, x.ndim, model_ok)
+    # divisibility guard on the sharded dim
+    dim = 1 if _POLICY.get("act_seq") else -1
+    if model_ok and x.ndim >= 3 and x.shape[dim] % mesh.shape["model"] != 0:
+        spec = activation_spec(mesh, x.ndim, False)
+    if x.shape[0] % _mesh_size(mesh, batch_axes(mesh)) != 0:
+        lst = list(spec)
+        lst[0] = None
+        spec = P(*lst)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

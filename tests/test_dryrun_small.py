@@ -1,0 +1,72 @@
+"""Dry-run machinery on a debug mesh (8 host devices, subprocess so the main
+test process keeps its single CPU device).  The full 512-device production
+dry-run for all 40 combos runs via ``python -m repro.launch.dryrun --all``
+(results recorded in EXPERIMENTS.md §Dry-run)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_dryrun(args, devices="8"):
+    env = dict(os.environ, PYTHONPATH=SRC, DRYRUN_DEVICES=devices,
+               JAX_PLATFORMS="cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, timeout=1200)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("whisper-medium", "train_4k"),
+    ("xlstm-1.3b", "decode_32k"),
+])
+def test_debug_mesh_dryrun(arch, shape, tmp_path):
+    out = tmp_path / "res.json"
+    r = _run_dryrun(["--arch", arch, "--shape", shape, "--mesh", "debug",
+                     "--json", str(out)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    res = json.loads(out.read_text())[0]
+    assert res["ok"]
+    assert res["roofline"]["t_compute_s"] > 0
+    assert res["memory"]["total_hbm_bytes"] > 0
+
+
+def test_debug_multipod_mesh(tmp_path):
+    out = tmp_path / "res.json"
+    r = _run_dryrun(["--arch", "whisper-medium", "--shape", "decode_32k",
+                     "--mesh", "debug-multi", "--json", str(out)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    res = json.loads(out.read_text())[0]
+    assert res["ok"] and res["devices"] == 8
+
+
+def test_sharding_rules_on_debug_mesh():
+    """Param specs: rule table + divisibility fallback, on a real mesh."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_debug_mesh
+from repro.sharding.rules import spec_for
+mesh = make_debug_mesh()  # (2,2) data,model
+# attention wq [L, d, H*hd] -> (None, data, model)
+assert spec_for("blocks/attn/wq/w", (4, 64, 64), mesh) == P(None, "data", "model")
+# moe experts divisible -> expert axis sharded
+assert spec_for("blocks/moe/w_gate", (4, 8, 64, 64), mesh) == P(None, "model", "data", None)
+# indivisible expert count -> falls back
+assert spec_for("blocks/moe/w_gate", (4, 3, 64, 64), mesh) == P(None, None, "data", "model")
+# 1-d params replicate
+assert spec_for("blocks/attn_norm/scale", (64,), mesh) == P()
+# odd dims fall back to replication
+assert spec_for("blocks/mlp/w_up/w", (4, 63, 65), mesh) == P(None, None, None)
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stdout + r.stderr

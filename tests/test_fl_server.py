@@ -1,0 +1,75 @@
+"""FL server aggregation paths: width-sliced scatter, depth-truncated
+structure tolerance, DR-FL masks, evaluation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (WIDTH_LEVELS, scalefl_submodel,
+                                  width_slice_cnn)
+from repro.fl import server as fl_server
+from repro.models import cnn
+
+
+def _params():
+    return cnn.init(jax.random.PRNGKey(0), num_classes=10, width_mult=0.25)
+
+
+def test_width_slice_shapes_shrink():
+    p = _params()
+    half = width_slice_cnn(p, 0.5)
+    assert half["stem"]["conv"].shape[3] == p["stem"]["conv"].shape[3] // 2
+    assert half["stem"]["conv"].shape[2] == 3          # input channels kept
+    full = width_slice_cnn(p, 1.0)
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(p)):
+        assert a.shape == b.shape
+
+
+def test_scalefl_submodel_truncates_depth_and_width():
+    p = _params()
+    sub = scalefl_submodel(p, 1)          # depth 2 stages, width 0.5
+    assert len(sub["stages"]) == 2 and len(sub["exits"]) == 2
+    assert sub["stages"][0][0]["conv1"].shape[3] \
+        == p["stages"][0][0]["conv1"].shape[3] // 2
+
+
+def test_aggregate_sliced_identity_on_full_slices():
+    """A single full-width zero delta leaves the global model unchanged."""
+    p = _params()
+    zero = jax.tree.map(jnp.zeros_like, width_slice_cnn(p, 1.0))
+    out = fl_server.aggregate_sliced(p, [zero], [1.0])
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_aggregate_sliced_partial_coverage():
+    """A quarter-width delta of ones bumps exactly its covered entries."""
+    p = _params()
+    delta = jax.tree.map(jnp.ones_like, width_slice_cnn(p, 0.25))
+    out = fl_server.aggregate_sliced(p, [delta], [2.0])
+    w_new = np.asarray(out["stem"]["conv"])
+    w_old = np.asarray(p["stem"]["conv"])
+    cov = delta["stem"]["conv"].shape[3]
+    np.testing.assert_allclose(w_new[..., :cov], w_old[..., :cov] + 1.0,
+                               rtol=1e-6)
+    np.testing.assert_allclose(w_new[..., cov:], w_old[..., cov:])
+
+
+def test_aggregate_drfl_untrained_exits_unchanged():
+    p = _params()
+    delta = jax.tree.map(jnp.ones_like, p)
+    out = fl_server.aggregate_drfl(p, [delta], [0], [1.0])   # Model_1 client
+    # exit 3 untouched
+    np.testing.assert_allclose(np.asarray(out["exits"][3]["w"]),
+                               np.asarray(p["exits"][3]["w"]))
+    # stem moved
+    assert not np.allclose(np.asarray(out["stem"]["conv"]),
+                           np.asarray(p["stem"]["conv"]))
+
+
+def test_evaluate_returns_per_exit_accuracy():
+    p = _params()
+    x = np.random.default_rng(0).normal(size=(32, 16, 16, 3)).astype(np.float32)
+    y = np.random.default_rng(1).integers(0, 10, 32)
+    accs = fl_server.evaluate(p, x, y)
+    assert accs.shape == (4,)
+    assert np.all((accs >= 0) & (accs <= 1))

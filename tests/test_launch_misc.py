@@ -1,0 +1,77 @@
+"""Launch-layer odds and ends: shape adaptation, serve builders, slot server."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, TrainConfig, get_config, get_smoke_config
+from repro.launch.steps import (adapt_for_shape, build_prefill_step,
+                                build_serve_step, chunked_cross_entropy)
+
+
+def test_adapt_for_shape_swa_policy():
+    yi = get_config("yi-34b")
+    assert adapt_for_shape(yi, INPUT_SHAPES["long_500k"]).window == 8192
+    assert adapt_for_shape(yi, INPUT_SHAPES["train_4k"]).window == 0
+    mix = get_config("mixtral-8x22b")   # native SWA kept
+    assert adapt_for_shape(mix, INPUT_SHAPES["long_500k"]).window == 4096
+    xl = get_config("xlstm-1.3b")       # recurrent: untouched
+    assert adapt_for_shape(xl, INPUT_SHAPES["long_500k"]).window == 0
+
+
+def test_prefill_step_last_logits():
+    cfg = get_smoke_config("minitron-8b")
+    model, step = build_prefill_step(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    out = jax.jit(step)(params, {"tokens": toks})
+    assert out.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_serve_step_greedy_token():
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    model, step = build_serve_step(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.decode_init(params, 2, 8)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    nxt, cache = jax.jit(step, donate_argnums=(1,))(params, cache, tok,
+                                                    jnp.int32(0))
+    assert nxt.shape == (2, 1) and nxt.dtype == jnp.int32
+    assert int(cache["pos"][0]) == 1
+
+
+def test_chunked_ce_matches_dense():
+    key = jax.random.PRNGKey(0)
+    B, S, d, V = 2, 16, 8, 32
+    h = jax.random.normal(key, (B, S, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, V))
+    lab = jax.random.randint(jax.random.fold_in(key, 2), (B, S), 0, V)
+    dense = (jax.nn.logsumexp(h @ W, -1)
+             - jnp.take_along_axis(h @ W, lab[..., None], -1)[..., 0]).mean()
+    for chunk in (4, 8, 16):
+        out = chunked_cross_entropy(h, W, lab, chunk)
+        np.testing.assert_allclose(float(out), float(dense), rtol=1e-5)
+    # masked labels excluded
+    lab2 = lab.at[:, :8].set(-1)
+    out = chunked_cross_entropy(h, W, lab2, 8)
+    dense2 = (jax.nn.logsumexp(h @ W, -1)
+              - jnp.take_along_axis(h @ W, jnp.maximum(lab2, 0)[..., None],
+                                    -1)[..., 0])[:, 8:].mean()
+    np.testing.assert_allclose(float(out), float(dense2), rtol=1e-5)
+
+
+def test_slot_server_serves_requests():
+    from repro.launch.serve import SlotServer
+    cfg = get_smoke_config("minitron-8b")
+    srv = SlotServer(cfg, slots=2, max_len=48)
+    rng = np.random.default_rng(0)
+    pending = [rng.integers(0, cfg.vocab_size, size=6) for _ in range(3)]
+    done = 0
+    while done < 3 and srv.pos < srv.max_len - 1:
+        while pending and srv.submit(pending[0], 3) is not None:
+            pending.pop(0)
+        done += len(srv.step())
+    assert done == 3

@@ -1,0 +1,160 @@
+"""Model-substrate correctness: decode==prefill, masks, chunkwise==recurrent."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.core.layerwise import layer_mask
+from repro.models import build, extra_inputs
+
+DECODE_TOL = 2e-4
+
+
+def _mk(arch, **over):
+    cfg = get_smoke_config(arch)
+    if cfg.num_experts:
+        over.setdefault("moe_capacity_factor", 100.0)  # no drops: exact match
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_prefill(arch):
+    cfg = _mk(arch)
+    m = build(cfg)
+    key = jax.random.PRNGKey(1)
+    params = m.init(key)
+    B, S = 2, 12
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    extras = {k: jax.random.normal(key, shp).astype(dt)
+              for k, (shp, dt) in extra_inputs(cfg, B, S).items()}
+    hidden, _ = m.apply(params, tokens, extras, remat="none")
+    ref = m.logits(params, hidden)
+    cache = m.decode_init(params, B, S, extras=extras)
+    outs = []
+    for t in range(S):
+        lg, cache = m.decode_step(params, cache, tokens[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               atol=DECODE_TOL, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "xlstm-1.3b", "zamba2-1.2b",
+                                  "mixtral-8x22b", "whisper-medium"])
+def test_layer_mask_prefix_identity(arch):
+    """Masked-out layers must be exact identities: full mask == default, and
+    a zero mask reduces the stack to embed+final norm."""
+    cfg = _mk(arch)
+    m = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S = 2, 8
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    extras = {k: jax.random.normal(key, shp).astype(dt)
+              for k, (shp, dt) in extra_inputs(cfg, B, S).items()}
+    h_full, _ = m.apply(params, tokens, extras, remat="none")
+    ones = jnp.ones((cfg.num_layers,), jnp.float32)
+    h_mask, _ = m.apply(params, tokens, extras, layer_mask=ones, remat="none")
+    np.testing.assert_allclose(np.asarray(h_full, np.float32),
+                               np.asarray(h_mask, np.float32), atol=1e-5)
+    # prefix mask changes the output (layers do something)
+    half = layer_mask(dataclasses.replace(cfg, exit_points=(1, 2)), 0)
+    h_half, _ = m.apply(params, tokens, extras, layer_mask=half, remat="none")
+    assert not np.allclose(np.asarray(h_half, np.float32),
+                           np.asarray(h_full, np.float32), atol=1e-5)
+
+
+def test_mlstm_chunkwise_matches_recurrent():
+    from repro.models.xlstm import (_mlstm_chunk_scan, mlstm_step)
+    key = jax.random.PRNGKey(0)
+    B, H, S, P = 2, 3, 32, 16
+    ks = jax.random.split(key, 5)
+    q, k, v = (jax.random.normal(ks[i], (B, H, S, P)) for i in range(3))
+    log_i = jax.random.normal(ks[3], (B, H, S))
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, H, S)) + 2.0)
+    y_chunk, (C, n, m) = _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk=8)
+    st = (jnp.zeros((B, H, P, P)), jnp.zeros((B, H, P)),
+          jnp.full((B, H), -1e30))
+    ys = []
+    for t in range(S):
+        y, st = mlstm_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                           log_i[:, :, t], log_f[:, :, t], st)
+        ys.append(y)
+    y_rec = jnp.stack(ys, axis=2)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(st[0]),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_chunk_sizes_agree():
+    """Mamba2 SSD: result independent of chunk length (algorithm identity)."""
+    from repro.models.ssm import _ssd_chunk_scan
+    key = jax.random.PRNGKey(0)
+    B, S, H, P, N = 2, 32, 4, 8, 8
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    Bm = jax.random.normal(ks[1], (B, S, N))
+    Cm = jax.random.normal(ks[2], (B, S, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    log_a = -dt * 0.5
+    D = jnp.ones((H,))
+    y1, s1 = _ssd_chunk_scan(xh, Bm, Cm, dt, log_a, D, 4)
+    y2, s2 = _ssd_chunk_scan(xh, Bm, Cm, dt, log_a, D, 16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_swa_ring_cache_wraps():
+    """Sliding-window decode past the cache length must keep matching the
+    windowed teacher-forced forward."""
+    cfg = _mk("mixtral-8x22b", window=8)
+    m = build(cfg)
+    key = jax.random.PRNGKey(2)
+    params = m.init(key)
+    B, S = 1, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    hidden, _ = m.apply(params, tokens, remat="none")
+    ref = m.logits(params, hidden)
+    cache = m.decode_init(params, B, S)   # cache length = window = 8 < S
+    outs = []
+    for t in range(S):
+        lg, cache = m.decode_step(params, cache, tokens[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_pallas_attention_path_matches_xla():
+    """use_pallas=True (interpret on CPU) must match the XLA attention path."""
+    cfg = _mk("yi-34b")
+    m = build(cfg)
+    key = jax.random.PRNGKey(3)
+    params = m.init(key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    h_xla, _ = m.apply(params, tokens, remat="none", use_pallas=False)
+    h_pal, _ = m.apply(params, tokens, remat="none", use_pallas=True)
+    np.testing.assert_allclose(np.asarray(h_pal, np.float32),
+                               np.asarray(h_xla, np.float32),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_chunked_attention_matches_naive():
+    from repro.models.layers import gqa_attend, gqa_attend_chunked
+    key = jax.random.PRNGKey(0)
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    for causal, window in ((True, 0), (True, 24), (False, 0)):
+        ref = gqa_attend(q, k, v, causal=causal, window=window)
+        out = gqa_attend_chunked(q, k, v, causal=causal, window=window, chunk=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-4)

@@ -1,0 +1,105 @@
+"""End-to-end behaviour tests for the DR-FL system (paper workflow §4.2)."""
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, run_simulation
+
+
+@pytest.fixture(scope="module")
+def drfl_history():
+    cfg = FLConfig(n_devices=8, n_rounds=8, participation=0.4, n_train=900,
+                   local_epochs=2, method="drfl", selector="greedy", seed=3,
+                   noise=0.8)
+    return run_simulation(cfg)
+
+
+def test_drfl_learns_above_chance(drfl_history):
+    h = drfl_history
+    assert max(h["acc_mean"]) > 0.13          # > chance (0.1) on mean of exits
+    assert float(np.max(h["best_acc"])) > 0.3  # best exit learns clearly
+
+
+def test_energy_ledger_monotone_and_consistent(drfl_history):
+    e = drfl_history["energy"]
+    assert all(e[i + 1] <= e[i] + 1e-6 for i in range(len(e) - 1))
+    assert e[-1] >= 0.0
+
+
+def test_round_time_is_max_over_participants(drfl_history):
+    assert all(t >= 0 for t in drfl_history["round_time"])
+    assert len(drfl_history["participants"]) == len(drfl_history["acc_mean"])
+
+
+def test_participation_cap(drfl_history):
+    k = max(1, int(round(0.4 * 8)))
+    assert all(len(p) <= k for p in drfl_history["participants"])
+
+
+def test_model_choices_valid(drfl_history):
+    for choices in drfl_history["model_choices"]:
+        assert all(0 <= m < 4 for m in choices)
+
+
+def test_marl_arm_runs_and_records_rewards():
+    cfg = FLConfig(n_devices=6, n_rounds=4, participation=0.5, n_train=600,
+                   local_epochs=1, method="drfl", selector="marl", seed=0)
+    h = run_simulation(cfg)
+    assert len(h["reward"]) == 4
+    assert np.isfinite(h["reward"]).all()
+
+
+def test_baseline_arms_run():
+    for method in ("heterofl", "scalefl"):
+        cfg = FLConfig(n_devices=6, n_rounds=2, participation=0.5, n_train=500,
+                       local_epochs=1, method=method, seed=1)
+        h = run_simulation(cfg)
+        assert len(h["acc_mean"]) == 2
+        assert np.isfinite(h["acc_mean"]).all()
+
+
+def test_energy_constraint_kills_devices():
+    """With a tiny battery the fleet dies and the run ends early — the
+    paper's RQ2 failure mode."""
+    cfg = FLConfig(n_devices=6, n_rounds=12, participation=0.6, n_train=500,
+                   local_epochs=2, method="drfl", selector="random",
+                   energy_scale=0.002, seed=2)
+    h = run_simulation(cfg)
+    assert h["alive"][-1] < 6
+    assert h["dropouts"] >= 0
+
+
+def test_hotplug_devices_join_mid_run():
+    """Paper §4.2: hot-plug devices connect mid-run, receive the global
+    model, and participate from their join round with fresh batteries."""
+    cfg = FLConfig(n_devices=5, n_rounds=6, participation=0.6, n_train=500,
+                   local_epochs=1, method="drfl", selector="greedy", seed=4,
+                   hotplug_round=3, hotplug_n=3)
+    h = run_simulation(cfg)
+    # before the join round, at most 5 devices exist/participate
+    assert all(i < 5 for p in h["participants"][:3] for i in p)
+    assert h["alive"][0] == 5
+    assert h["alive"][3] == 8
+    # a hot-plugged device (index >= 5) participates after joining
+    late = {i for p in h["participants"][3:] for i in p}
+    assert any(i >= 5 for i in late)
+
+
+def test_fl_env_gym_interface():
+    from repro.fl.environment import FLEnv, FLEnvConfig
+    import numpy as np
+    env = FLEnv(FLEnvConfig(n_devices=6, n_rounds=5, seed=0))
+    obs = env.reset()
+    assert obs.shape == (6, env.obs_dim)
+    total_r = 0.0
+    for t in range(5):
+        acts = np.full(6, 0)        # everyone trains the smallest model
+        obs, r, done, info = env.step(acts)
+        total_r += r
+        assert np.isfinite(r)
+    assert done
+    assert info["acc"] > 0.1        # proxy accuracy improved
+    # abstention spends no energy
+    env2 = FLEnv(FLEnvConfig(n_devices=6, n_rounds=5, seed=0))
+    env2.reset()
+    _, _, _, info2 = env2.step(np.full(6, 4))
+    assert info2["energy"] >= info["energy"]
