@@ -1,8 +1,17 @@
 """Paper Fig. 6: learning curves / final accuracy for different fleet sizes
 (RQ3 scalability).  Directional claim: DR-FL's advantage does not degrade —
-and typically grows — with more heterogeneous devices."""
+and typically grows — with more heterogeneous devices.
+
+Fleet sizes are overridable for large-scale runs (the vectorized FleetState
+engine handles 256+ devices):
+
+    REPRO_FIG6_SIZES=64,256 python -m benchmarks.fig6_scalability
+    python -m benchmarks.fig6_scalability 64 256
+"""
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import numpy as np
@@ -13,24 +22,44 @@ from repro.fl import FLConfig, run_simulation
 SIZES = (8, 14) if FAST else (10, 20, 40)
 
 
-def main(seed=0, verbose=False):
+def _env_sizes():
+    raw = os.environ.get("REPRO_FIG6_SIZES", "")
+    if not raw:
+        return None
+    try:
+        return tuple(int(s) for s in raw.replace(",", " ").split())
+    except ValueError as e:
+        raise SystemExit(
+            f"REPRO_FIG6_SIZES must be comma/space-separated ints, "
+            f"got {raw!r}") from e
+
+
+def main(seed=0, verbose=False, sizes=None):
+    sizes = tuple(sizes) if sizes else (_env_sizes() or SIZES)
     p = bench_params()
     results = {}
-    for n in SIZES:
+    for n in sizes:
         for method, sel in (("drfl", "marl"), ("heterofl", "greedy")):
             t0 = time.time()
-            cfg = FLConfig(**{**p, "n_devices": n}, method=method,
+            # at large fleets keep the paper's 10% participation so k (and
+            # the per-round training cost) stays proportionate
+            overrides = {"n_devices": n}
+            if n >= 64:
+                overrides["participation"] = min(p.get("participation", 0.1),
+                                                 0.1)
+            cfg = FLConfig(**{**p, **overrides}, method=method,
                            selector=sel, seed=seed, marl_episodes=3)
             h = run_simulation(cfg, verbose=verbose)
             acc = float(np.mean(h["best_acc"]))
             results[(n, method)] = acc
             emit(f"fig6/{method}/n{n}", (time.time() - t0) * 1e6,
                  f"best_acc_mean={acc:.3f}")
-    for n in SIZES:
+    for n in sizes:
         emit(f"fig6/gap/n{n}", 0.0,
              f"drfl_minus_heterofl={results[(n, 'drfl')] - results[(n, 'heterofl')]:.3f}")
     return results
 
 
 if __name__ == "__main__":
-    main(verbose=True)
+    cli_sizes = tuple(int(a) for a in sys.argv[1:]) or None
+    main(verbose=True, sizes=cli_sizes)

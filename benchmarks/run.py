@@ -13,8 +13,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig5_energy, fig6_scalability, kernels_bench,
-                            roofline, table1_accuracy, table2_valratio)
+    from benchmarks import (fig5_energy, fig6_scalability, fleet_bench,
+                            kernels_bench, roofline, table1_accuracy,
+                            table2_valratio)
     print("name,us_per_call,derived")
     suites = [
         ("table1", table1_accuracy.main),
@@ -22,6 +23,7 @@ def main() -> None:
         ("fig6", fig6_scalability.main),
         ("table2", table2_valratio.main),
         ("kernels", kernels_bench.main),
+        ("fleet", fleet_bench.main),
         ("roofline", roofline.main),
     ]
     failures = 0

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify — the one reproducible entry point for the suite.
+# Runs the exact command recorded in ROADMAP.md from any working directory;
+# extra args pass through to pytest (e.g. scripts/tier1.sh -m 'not slow').
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -1,0 +1,105 @@
+"""Minimal offline stand-in for the ``hypothesis`` property-testing API.
+
+Only importable when the real package is missing: ``tests/conftest.py``
+prepends this directory to ``sys.path`` *iff* ``import hypothesis`` fails,
+so an installed hypothesis always wins.
+
+Supported surface (what the repo's tests use):
+
+* ``@given(**kwargs)`` — draws ``max_examples`` deterministic examples per
+  test from the supplied strategies and runs the test once per example.
+  Seeding derives from the test's qualified name, so failures reproduce.
+* ``@settings(max_examples=..., deadline=...)`` — ``max_examples`` is
+  honoured; everything else is accepted and ignored.
+* ``assume(cond)`` — skips the current example when ``cond`` is falsy.
+* ``strategies`` — see :mod:`hypothesis.strategies` (integers, floats,
+  booleans, sampled_from, just, lists, tuples).
+
+This is NOT shrinking, targeted, or database-backed generation — it is a
+deterministic sweep that keeps property tests meaningful offline.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+import random
+
+from . import strategies  # noqa: F401  (re-export for `hypothesis.strategies`)
+
+__version__ = "0.0.0+repro.fallback"
+_SETTINGS_ATTR = "_repro_fallback_settings"
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck(enum.Enum):  # accepted by settings(suppress_health_check=...)
+    too_slow = 1
+    filter_too_much = 2
+    data_too_large = 3
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording ``max_examples``; order with @given is free."""
+
+    def deco(fn):
+        setattr(fn, _SETTINGS_ATTR, {"max_examples": int(max_examples)})
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Deterministic-sweep replacement for hypothesis.given."""
+    for name, strat in strategy_kwargs.items():
+        if not isinstance(strat, strategies.SearchStrategy):
+            raise TypeError(f"@given argument {name!r} is not a strategy: "
+                            f"{strat!r}")
+
+    def deco(fn):
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, _SETTINGS_ATTR, None) \
+                or getattr(fn, _SETTINGS_ATTR, None) \
+                or {"max_examples": _DEFAULT_MAX_EXAMPLES}
+            # Seed from the test identity (sha-based for str seeds: stable
+            # across processes, unlike hash()).
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            for _ in range(max(1, cfg["max_examples"]) * 5):
+                if ran >= cfg["max_examples"]:
+                    break
+                drawn = {name: strat.example(rng)
+                         for name, strat in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            return None
+
+        # pytest must not see the strategy-drawn parameters (it would demand
+        # fixtures for them): hide the original signature and publish one
+        # with those parameters removed.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs])
+        # NOTE: deliberately no `wrapper.hypothesis` attribute — pytest's
+        # builtin hypothesis integration introspects it and would break.
+        return wrapper
+
+    return deco

@@ -1,0 +1,84 @@
+"""Minimal strategies for the vendored hypothesis fallback.
+
+Each strategy draws from a seeded ``random.Random`` via ``example(rng)``.
+The first few examples are boundary values (min/max/first element) so the
+deterministic sweep still probes edges the way hypothesis tends to.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundary: Sequence[Any] = ()):
+        self._draw = draw
+        self._boundary = list(boundary)
+        self._emitted = 0
+
+    def example(self, rng: random.Random) -> Any:
+        if self._emitted < len(self._boundary):
+            v = self._boundary[self._emitted]
+        else:
+            v = self._draw(rng)
+        self._emitted += 1
+        return v
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        parent = self
+        return SearchStrategy(lambda rng: fn(parent.example(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        parent = self
+
+        def draw(rng):
+            for _ in range(1000):
+                v = parent.example(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 1000 examples")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          boundary=(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          boundary=(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)),
+                          boundary=(False, True))
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: elems[rng.randrange(len(elems))],
+                          boundary=elems[:1])
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def lists(element: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+
+    def draw(rng) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [element.example(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*elements: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(e.example(rng) for e in elements))

@@ -15,7 +15,31 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # offline container: fall back to stdlib zlib
+    zstd = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    # Sniff the frame magic so either codec's checkpoints load regardless of
+    # which library is installed now.
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "zstandard package is not installed")
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _path_str(kp) -> str:
@@ -45,14 +69,14 @@ def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
     raw = msgpack.packb(payload, use_bin_type=True)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(zstd.ZstdCompressor(level=3).compress(raw))
+        f.write(_compress(raw))
     os.replace(tmp, path)
     return path
 
 
 def load_pytree(path: str, template: Any) -> Any:
     with open(path, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template), None
     kps, tmpl_leaves = zip(*leaves[0]) if leaves[0] else ((), ())

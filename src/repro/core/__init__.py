@@ -2,7 +2,10 @@
 
 * layerwise    — depth-prefix submodels + masks (§4.2)
 * aggregation  — FedAvg + layer-aligned masked aggregation (Step 2)
-* energy       — Eq. 3–7 time/energy system model + device fleet
+* energy       — Eq. 3–7 time/energy system model + device fleet (scalar
+                 reference semantics)
+* fleet        — vectorized struct-of-arrays FleetState engine (batched
+                 Eq. 3–7 kernels; numpy parity + jax/jit backends)
 * selection    — dual-selection strategies (MARL / greedy / random / static)
 * marl         — QMIX learner (agents, mixer, replay, TD updates)
 * baselines    — HeteroFL / ScaleFL comparison arms
@@ -10,6 +13,12 @@
 from repro.core.aggregation import fedavg, fl_allreduce, layerwise_aggregate  # noqa: F401
 from repro.core.energy import (BATTERY_JOULES, DeviceProfile, DeviceState,  # noqa: F401
                                make_fleet, round_cost, charge, total_remaining)
+from repro.core.fleet import (FleetState, as_fleet_state,  # noqa: F401
+                              fleet_affordability, fleet_charge,
+                              fleet_connect, fleet_cost_matrix,
+                              fleet_disconnect, fleet_round_cost,
+                              fleet_total_remaining, make_fleet_state,
+                              set_modes)
 from repro.core.layerwise import (exit_points, layer_mask, num_submodels,  # noqa: F401
                                   stacked_update_mask, submodel_fraction)
 from repro.core.selection import (GreedySelector, MarlSelector,  # noqa: F401

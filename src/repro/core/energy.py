@@ -124,3 +124,21 @@ def make_fleet(n: int, seed: int = 0,
         fleet.append(DeviceState(profile=prof, remaining=prof.battery,
                                  data_size=ds))
     return fleet
+
+
+# The functions above are the SCALAR REFERENCE semantics; the vectorized
+# struct-of-arrays engine lives in repro.core.fleet.  Lazy re-export (PEP
+# 562) so `from repro.core.energy import FleetState` works without a
+# circular import (fleet.py imports this module at its top).
+_FLEET_EXPORTS = ("FleetState", "as_fleet_state", "make_fleet_state",
+                  "fleet_round_cost", "fleet_cost_matrix",
+                  "fleet_affordability", "fleet_charge",
+                  "fleet_total_remaining", "fleet_connect",
+                  "fleet_disconnect", "set_modes")
+
+
+def __getattr__(name):
+    if name in _FLEET_EXPORTS:
+        from repro.core import fleet as _fleet
+        return getattr(_fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

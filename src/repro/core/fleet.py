@@ -1,0 +1,271 @@
+"""Vectorized struct-of-arrays device fleet — the FleetState engine.
+
+:mod:`repro.core.energy` defines the scalar per-device reference semantics
+(``DeviceState`` + ``round_cost``/``charge``).  This module holds the same
+state as a struct of arrays and evaluates the paper's Eq. 3–7 fleet-wide in
+a handful of batched array ops, so per-round selection + energy accounting
+is O(1) kernel dispatches instead of O(n) Python loops (the RQ3/Fig. 6
+scalability path: 256+ device fleets).
+
+Two interchangeable backends share the same code (the kernels are written
+against the array API common to numpy and jnp):
+
+* ``backend="numpy"`` — float64 ops whose per-element expressions match the
+  ``DeviceState`` reference path bit-for-bit (the parity contract enforced
+  by ``tests/test_fleet.py``);
+* ``backend="jax"`` — jnp arrays; ``FleetState`` is a registered pytree so
+  the jitted kernels (``fleet_affordability_jit`` …) take and return it
+  directly.  This is what ``run_simulation`` and the selectors use.
+
+All kernels are functional: ``fleet_charge`` returns a NEW FleetState, the
+input is never mutated.
+
+``batch_size`` is accepted by the cost kernels for signature parity with
+the scalar ``round_cost`` (and so selectors are priced with the full round
+configuration), but — exactly like the scalar reference — the paper's
+Eq. 5 cost model is batch-size-independent (samples = L_n * epochs), so it
+does not enter any expression.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import (BATTERY_JOULES, DEVICE_TIERS, POWER_MODES,
+                               DeviceProfile, DeviceState, make_fleet)
+
+Array = Any  # np.ndarray | jax.Array — kernels are backend-generic
+
+# Array fields, in constructor order (tiers/modes are static aux data).
+_ARRAY_FIELDS = ("compute", "p_train", "p_com", "bandwidth", "battery",
+                 "remaining", "data_size", "mode_compute", "mode_power",
+                 "alive")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FleetState:
+    """Struct-of-arrays fleet: every field is a [n_devices] array.
+
+    ``mode_compute``/``mode_power`` are the POWER_MODES multipliers applied
+    to ``compute``/``p_train`` (the MARL "adjust the computing capability"
+    knob); ``tiers``/``modes`` keep the human-readable labels as static
+    metadata for the DeviceState compatibility view.
+    """
+
+    compute: Array            # samples/s at full model, normal mode
+    p_train: Array            # W
+    p_com: Array              # W
+    bandwidth: Array          # bytes/s uplink
+    battery: Array            # J capacity
+    remaining: Array          # J
+    data_size: Array          # L_n local samples
+    mode_compute: Array       # POWER_MODES compute multiplier
+    mode_power: Array         # POWER_MODES power multiplier
+    alive: Array              # bool
+    tiers: Tuple[str, ...] = ()
+    modes: Tuple[str, ...] = ()
+
+    # --- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in _ARRAY_FIELDS),
+                (self.tiers, self.modes))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, tiers=aux[0], modes=aux[1])
+
+    def __len__(self) -> int:
+        return int(np.shape(self.compute)[0])
+
+    def replace(self, **kw) -> "FleetState":
+        return dataclasses.replace(self, **kw)
+
+    # --- conversions (the thin DeviceState compatibility view) -------------
+    @classmethod
+    def from_devices(cls, devices: Sequence[DeviceState],
+                     backend: str = "numpy") -> "FleetState":
+        def arr(vals, dtype):
+            a = np.asarray(vals, dtype)
+            return jnp.asarray(a) if backend == "jax" else a
+
+        modes = tuple(d.mode for d in devices)
+        mults = [POWER_MODES[m] for m in modes]
+        return cls(
+            compute=arr([d.profile.compute for d in devices], np.float64),
+            p_train=arr([d.profile.p_train for d in devices], np.float64),
+            p_com=arr([d.profile.p_com for d in devices], np.float64),
+            bandwidth=arr([d.profile.bandwidth for d in devices], np.float64),
+            battery=arr([d.profile.battery for d in devices], np.float64),
+            remaining=arr([d.remaining for d in devices], np.float64),
+            data_size=arr([d.data_size for d in devices], np.int64),
+            mode_compute=arr([m[0] for m in mults], np.float64),
+            mode_power=arr([m[1] for m in mults], np.float64),
+            alive=arr([d.alive for d in devices], bool),
+            tiers=tuple(d.profile.tier for d in devices),
+            modes=modes,
+        )
+
+    def device_view(self, i: int) -> DeviceState:
+        """Fresh DeviceState snapshot of device ``i`` (detached copy)."""
+        prof = DeviceProfile(
+            tier=self.tiers[i] if self.tiers else "medium",
+            compute=float(self.compute[i]), p_train=float(self.p_train[i]),
+            p_com=float(self.p_com[i]), bandwidth=float(self.bandwidth[i]),
+            battery=float(self.battery[i]))
+        return DeviceState(
+            profile=prof, remaining=float(self.remaining[i]),
+            data_size=int(self.data_size[i]),
+            mode=self.modes[i] if self.modes else "normal",
+            alive=bool(self.alive[i]))
+
+    def to_devices(self) -> List[DeviceState]:
+        return [self.device_view(i) for i in range(len(self))]
+
+
+def as_fleet_state(devices) -> FleetState:
+    """Normalise selector/engine input: FleetState passes through, a
+    DeviceState sequence gets the exact-semantics numpy view."""
+    if isinstance(devices, FleetState):
+        return devices
+    return FleetState.from_devices(devices, backend="numpy")
+
+
+def fleet_is_jax(fleet: FleetState) -> bool:
+    """True for jax-backed fleets — callers in per-round hot paths use this
+    to pick the jitted kernel variants."""
+    return isinstance(fleet.remaining, jax.Array)
+
+
+def _xp(fleet: FleetState):
+    return jnp if isinstance(fleet.remaining, jax.Array) else np
+
+
+def _aslike(fleet: FleetState, v) -> Array:
+    xp = _xp(fleet)
+    return xp.asarray(v, dtype=fleet.remaining.dtype)
+
+
+def make_fleet_state(n: int, seed: int = 0, tier_probs=(0.4, 0.3, 0.3),
+                     data_sizes: Optional[List[int]] = None,
+                     backend: str = "jax") -> FleetState:
+    """SoA analogue of :func:`repro.core.energy.make_fleet` — built from it,
+    so the sampled profiles are identical for a given seed."""
+    return FleetState.from_devices(
+        make_fleet(n, seed, tier_probs, data_sizes), backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# batched Eq. 3–7 kernels
+# ---------------------------------------------------------------------------
+
+
+def fleet_round_cost(fleet: FleetState, model_bytes, model_fraction,
+                     local_epochs: int = 5, batch_size: int = 32):
+    """Per-device (t_tra, t_com, e_tra, e_com) [n] for ONE submodel —
+    vectorized twin of :func:`repro.core.energy.round_cost`."""
+    xp = _xp(fleet)
+    eff = fleet.compute * fleet.mode_compute / xp.maximum(
+        _aslike(fleet, model_fraction), 1e-6)
+    t_tra = fleet.data_size * local_epochs / eff
+    t_com = 2.0 * _aslike(fleet, model_bytes) / fleet.bandwidth
+    e_tra = fleet.p_train * fleet.mode_power * t_tra
+    e_com = fleet.p_com * t_com
+    return t_tra, t_com, e_tra, e_com
+
+
+def fleet_cost_matrix(fleet: FleetState, model_sizes, model_fractions,
+                      local_epochs: int = 5, batch_size: int = 32):
+    """(t_tra, t_com, e_tra, e_com), each [n, M]: every device crossed with
+    every submodel in one broadcasted evaluation."""
+    xp = _xp(fleet)
+    sizes = _aslike(fleet, model_sizes)                      # [M]
+    fracs = xp.maximum(_aslike(fleet, model_fractions), 1e-6)
+    eff = (fleet.compute * fleet.mode_compute)[:, None] / fracs[None, :]
+    t_tra = (fleet.data_size * local_epochs)[:, None] / eff
+    t_com = 2.0 * sizes[None, :] / fleet.bandwidth[:, None]
+    e_tra = (fleet.p_train * fleet.mode_power)[:, None] * t_tra
+    e_com = fleet.p_com[:, None] * t_com
+    return t_tra, t_com, e_tra, e_com
+
+
+def fleet_affordability(fleet: FleetState, model_sizes, model_fractions,
+                        local_epochs: int = 5, batch_size: int = 32):
+    """[n, M+1] bool action mask: column m < M is "device can pay for
+    submodel m this round" (strict <, matching ``charge``'s survival
+    condition), column M ("do not participate") is always legal.  Dead
+    devices can only abstain."""
+    xp = _xp(fleet)
+    _, _, e_tra, e_com = fleet_cost_matrix(
+        fleet, model_sizes, model_fractions, local_epochs, batch_size)
+    afford = ((e_tra + e_com) < fleet.remaining[:, None]) \
+        & fleet.alive[:, None]
+    abstain = xp.ones((len(fleet), 1), bool)
+    return xp.concatenate([afford, abstain], axis=1)
+
+
+def fleet_charge(fleet: FleetState, e_need: Array, active: Array
+                 ) -> Tuple[FleetState, Array]:
+    """Deduct ``e_need`` [n] J from every device where ``active`` [n] —
+    fleet-wide twin of :func:`repro.core.energy.charge`.
+
+    Returns (new_fleet, ok[n]).  An active device whose remaining energy is
+    <= its need attempts the round anyway, wastes the energy, and dies
+    (remaining -> 0, alive -> False) — the paper's 'useless training' arm
+    of the wooden-barrel effect.  Inactive and already-dead devices are
+    untouched."""
+    xp = _xp(fleet)
+    attempt = xp.asarray(active, bool) & fleet.alive
+    ok = attempt & (fleet.remaining > e_need)
+    died = attempt & ~ok
+    zeros = xp.zeros_like(fleet.remaining)
+    remaining = xp.where(ok, fleet.remaining - e_need,
+                         xp.where(died, zeros, fleet.remaining))
+    return fleet.replace(remaining=remaining, alive=fleet.alive & ~died), ok
+
+
+def fleet_total_remaining(fleet: FleetState) -> float:
+    return float(fleet.remaining.sum())
+
+
+def fleet_connect(fleet: FleetState, start: int,
+                  energy_scale: float = 1.0) -> FleetState:
+    """Hot-plug (paper §4.2 Step 1): devices [start:] come online with fresh
+    (scaled) batteries."""
+    xp = _xp(fleet)
+    joins = xp.arange(len(fleet)) >= start
+    return fleet.replace(
+        remaining=xp.where(joins, fleet.battery * energy_scale,
+                           fleet.remaining),
+        alive=fleet.alive | joins)
+
+
+def fleet_disconnect(fleet: FleetState, start: int) -> FleetState:
+    """Mark devices [start:] as not yet connected (dead, zero energy)."""
+    xp = _xp(fleet)
+    out = xp.arange(len(fleet)) >= start
+    return fleet.replace(
+        remaining=xp.where(out, 0.0, fleet.remaining),
+        alive=fleet.alive & ~out)
+
+
+def set_modes(fleet: FleetState, modes: Sequence[str]) -> FleetState:
+    """Apply per-device power modes (eco/normal/turbo), keeping the
+    multiplier arrays and the label metadata consistent."""
+    mults = [POWER_MODES[m] for m in modes]
+    return fleet.replace(
+        mode_compute=_aslike(fleet, [m[0] for m in mults]),
+        mode_power=_aslike(fleet, [m[1] for m in mults]),
+        modes=tuple(modes))
+
+
+# Jitted entry points for the jax backend.  local_epochs/batch_size trace as
+# scalars; model_sizes/model_fractions as float tuples (leaves).  FleetState
+# flows through as a pytree.
+fleet_cost_matrix_jit = jax.jit(fleet_cost_matrix)
+fleet_affordability_jit = jax.jit(fleet_affordability)
+fleet_charge_jit = jax.jit(fleet_charge)

@@ -5,17 +5,31 @@ layer-wise model each device trains and (b) which devices participate.
 action (action M = do not participate), then Top-K over the chosen Q values
 picks the participants.  Baseline selectors implement the comparison arms
 used in §5 (greedy energy-aware, random, static-by-tier).
+
+All selectors run on the vectorized :class:`repro.core.fleet.FleetState`
+engine (affordability masks and cost matrices are single batched kernel
+evaluations, not per-device Python loops).  They still accept a plain
+``Sequence[DeviceState]`` — :func:`as_fleet_state` converts through the
+numpy float64 backend, which matches the scalar reference semantics
+bit-for-bit, so legacy callers see identical decisions.
+
+``local_epochs``/``batch_size`` are threaded through ``select`` so the
+affordability mask prices exactly the round the simulation will charge
+(defaults match the paper's §5 values).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.energy import DeviceState, round_cost
+from repro.core.energy import DeviceState
+from repro.core.fleet import (FleetState, as_fleet_state, fleet_affordability,
+                              fleet_affordability_jit, fleet_cost_matrix,
+                              fleet_cost_matrix_jit, fleet_is_jax)
 from repro.core.marl.qmix import QmixConfig, QmixLearner, epsilon
 
 
@@ -29,9 +43,10 @@ class Selection:
 class SelectorBase:
     name = "base"
 
-    def select(self, devices: Sequence[DeviceState], round_idx: int,
-               k: int, model_sizes: Sequence[float],
-               model_fractions: Sequence[float]) -> Selection:
+    def select(self, devices, round_idx: int, k: int,
+               model_sizes: Sequence[float],
+               model_fractions: Sequence[float],
+               local_epochs: int = 5, batch_size: int = 32) -> Selection:
         raise NotImplementedError
 
     def observe_reward(self, reward: float):
@@ -40,7 +55,8 @@ class SelectorBase:
 
 def obs_vector(dev: DeviceState, round_idx: int, n_rounds: int) -> np.ndarray:
     """Paper Eq. 9: s_t^n = [L_n, C_n, E_n, t] (+ last-round latencies,
-    §4.3.2), normalised to O(1) ranges."""
+    §4.3.2), normalised to O(1) ranges.  Scalar reference for
+    :func:`fleet_obs`."""
     return np.array([
         dev.data_size / 1000.0,
         dev.effective_compute(1.0) / 500.0,
@@ -51,6 +67,19 @@ def obs_vector(dev: DeviceState, round_idx: int, n_rounds: int) -> np.ndarray:
 
 
 OBS_DIM = 5
+
+
+def fleet_obs(fleet: FleetState, round_idx: int, n_rounds: int) -> np.ndarray:
+    """[n, OBS_DIM] float32 — vectorized :func:`obs_vector` over the fleet."""
+    t = round_idx / max(n_rounds, 1)
+    cols = np.stack([
+        np.asarray(fleet.data_size, np.float64) / 1000.0,
+        np.asarray(fleet.compute * fleet.mode_compute) / 500.0,
+        np.asarray(fleet.remaining / fleet.battery),
+        np.full(len(fleet), t),
+        np.asarray(fleet.alive, np.float64),
+    ], axis=1)
+    return cols.astype(np.float32)
 
 
 class MarlSelector(SelectorBase):
@@ -82,37 +111,34 @@ class MarlSelector(SelectorBase):
         self.ep_obs, self.ep_state = [], []
         self.ep_actions, self.ep_rewards = [], []
 
-    def select(self, devices, round_idx, k, model_sizes, model_fractions):
-        obs = np.stack([obs_vector(d, round_idx, self.n_rounds) for d in devices])
+    def select(self, devices, round_idx, k, model_sizes, model_fractions,
+               local_epochs=5, batch_size=32):
+        fleet = as_fleet_state(devices)
+        obs = fleet_obs(fleet, round_idx, self.n_rounds)
         state = obs.reshape(-1)
         self.key, sub = jax.random.split(self.key)
         eps = epsilon(self.learner.cfg, self.total_rounds)
         self.total_rounds += 1
         # affordability action mask ("prevent selected devices from dropping
-        # out of the FL process due to energy limitations", paper §4.2 Step 3)
-        avail = np.zeros((len(devices), self.n_models + 1), bool)
-        avail[:, self.n_models] = True      # not participating: always legal
-        for i, d in enumerate(devices):
-            if not d.alive:
-                continue
-            for m in range(self.n_models):
-                _, _, e_tra, e_com = round_cost(d, model_sizes[m],
-                                                model_fractions[m])
-                avail[i, m] = (e_tra + e_com) < d.remaining
+        # out of the FL process due to energy limitations", paper §4.2 Step
+        # 3), priced at the round the simulation will actually charge
+        aff = (fleet_affordability_jit if fleet_is_jax(fleet)
+               else fleet_affordability)
+        avail = np.asarray(aff(
+            fleet, model_sizes, model_fractions, local_epochs, batch_size))
         actions, qv, self.hidden = self.learner.act(
             jnp.asarray(obs), self.hidden, sub, eps, jnp.asarray(avail))
-        actions = np.array(actions)   # writable copies
         qv = np.array(qv)
+        alive = np.asarray(fleet.alive)
         # dead devices never participate
-        for i, d in enumerate(devices):
-            if not d.alive:
-                actions[i] = self.n_models
-        willing = [i for i in range(len(devices)) if actions[i] < self.n_models]
+        actions = np.where(alive, np.array(actions), self.n_models)
+        willing = np.flatnonzero(actions < self.n_models)
         # Top-K over Q values among willing agents (paper §4.3.3)
-        willing.sort(key=lambda i: -qv[i])
-        chosen = willing[:k]
-        model_choice = [int(actions[i]) if i in chosen else -1
-                        for i in range(len(devices))]
+        order = willing[np.argsort(-qv[willing], kind="stable")]
+        chosen = [int(i) for i in order[:k]]
+        model_choice = [-1] * len(fleet)
+        for i in chosen:
+            model_choice[i] = int(actions[i])
         self.ep_obs.append(obs)
         self.ep_state.append(state)
         self.ep_actions.append(actions.copy())
@@ -123,8 +149,8 @@ class MarlSelector(SelectorBase):
         self.ep_rewards.append(float(reward))
 
     def episode_arrays(self, final_devices, round_idx):
-        obs = np.stack(self.ep_obs + [np.stack(
-            [obs_vector(d, round_idx, self.n_rounds) for d in final_devices])])
+        obs = np.stack(self.ep_obs + [fleet_obs(
+            as_fleet_state(final_devices), round_idx, self.n_rounds)])
         state = obs.reshape(obs.shape[0], -1)
         return (obs, state, np.stack(self.ep_actions),
                 np.asarray(self.ep_rewards, np.float32))
@@ -137,24 +163,26 @@ class GreedySelector(SelectorBase):
 
     name = "greedy"
 
-    def select(self, devices, round_idx, k, model_sizes, model_fractions):
-        choice = {}
-        for i, d in enumerate(devices):
-            if not d.alive:
-                continue
-            best = -1
-            for m in reversed(range(len(model_sizes))):
-                t_tra, t_com, e_tra, e_com = round_cost(
-                    d, model_sizes[m], model_fractions[m])
-                if e_tra + e_com < d.remaining:
-                    best = m
-                    break
-            if best >= 0:
-                choice[i] = best
-        order = sorted(choice, key=lambda i: -devices[i].remaining)
-        chosen = order[:k]
-        model_choice = [choice.get(i, -1) if i in chosen else -1
-                        for i in range(len(devices))]
+    def select(self, devices, round_idx, k, model_sizes, model_fractions,
+               local_epochs=5, batch_size=32):
+        fleet = as_fleet_state(devices)
+        M = len(model_sizes)
+        costs = (fleet_cost_matrix_jit if fleet_is_jax(fleet)
+                 else fleet_cost_matrix)
+        _, _, e_tra, e_com = costs(
+            fleet, model_sizes, model_fractions, local_epochs, batch_size)
+        remaining = np.asarray(fleet.remaining)
+        afford = (np.asarray(e_tra + e_com) < remaining[:, None]) \
+            & np.asarray(fleet.alive)[:, None]          # [n, M]
+        # largest affordable submodel per device (-1 if none)
+        best = np.where(afford.any(axis=1),
+                        M - 1 - np.argmax(afford[:, ::-1], axis=1), -1)
+        cand = np.flatnonzero(best >= 0)
+        order = cand[np.argsort(-remaining[cand], kind="stable")]
+        chosen = [int(i) for i in order[:k]]
+        model_choice = [-1] * len(fleet)
+        for i in chosen:
+            model_choice[i] = int(best[i])
         return Selection(participants=chosen, model_choice=model_choice)
 
 
@@ -166,11 +194,13 @@ class RandomSelector(SelectorBase):
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
 
-    def select(self, devices, round_idx, k, model_sizes, model_fractions):
-        alive = [i for i, d in enumerate(devices) if d.alive]
+    def select(self, devices, round_idx, k, model_sizes, model_fractions,
+               local_epochs=5, batch_size=32):
+        fleet = as_fleet_state(devices)
+        alive = [int(i) for i in np.flatnonzero(np.asarray(fleet.alive))]
         self.rng.shuffle(alive)
         chosen = alive[:k]
-        model_choice = [-1] * len(devices)
+        model_choice = [-1] * len(fleet)
         for i in chosen:
             model_choice[i] = int(self.rng.integers(0, len(model_sizes)))
         return Selection(participants=chosen, model_choice=model_choice)
@@ -185,12 +215,14 @@ class StaticTierSelector(SelectorBase):
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
 
-    def select(self, devices, round_idx, k, model_sizes, model_fractions):
-        alive = [i for i, d in enumerate(devices) if d.alive]
+    def select(self, devices, round_idx, k, model_sizes, model_fractions,
+               local_epochs=5, batch_size=32):
+        fleet = as_fleet_state(devices)
+        alive = [int(i) for i in np.flatnonzero(np.asarray(fleet.alive))]
         self.rng.shuffle(alive)
         chosen = alive[:k]
-        model_choice = [-1] * len(devices)
+        model_choice = [-1] * len(fleet)
         for i in chosen:
-            m = self.TIER_MODEL[devices[i].profile.tier]
+            m = self.TIER_MODEL[fleet.tiers[i]]
             model_choice[i] = min(m, len(model_sizes) - 1)
         return Selection(participants=chosen, model_choice=model_choice)

@@ -1,2 +1,3 @@
 from repro.fl.simulation import FLConfig, run_simulation  # noqa: F401
 from repro.fl.environment import FLEnv, FLEnvConfig  # noqa: F401
+from repro.core.fleet import FleetState, make_fleet_state  # noqa: F401

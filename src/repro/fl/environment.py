@@ -7,17 +7,23 @@ term in the reward is driven by a pluggable *accuracy proxy* (default: a
 diminishing-returns curve of useful aggregated work), so policy research can
 iterate thousands of episodes per minute; the full simulation
 (:mod:`repro.fl.simulation`) swaps in real training for the final numbers.
+
+The fleet is a vectorized :class:`repro.core.fleet.FleetState`; one ``step``
+is a constant number of batched array ops regardless of fleet size (numpy
+float64 backend: for the small fleets policy research sweeps, dispatch
+overhead beats jit, and the dynamics match the scalar reference
+bit-for-bit).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Tuple
 
 import numpy as np
 
-from repro.core.energy import (DeviceState, charge, make_fleet, round_cost,
-                               total_remaining)
-from repro.core.selection import OBS_DIM, obs_vector
+from repro.core.fleet import (FleetState, fleet_charge, fleet_cost_matrix,
+                              fleet_total_remaining, make_fleet_state)
+from repro.core.selection import OBS_DIM, fleet_obs
 
 
 def default_accuracy_proxy(progress: float) -> float:
@@ -56,18 +62,17 @@ class FLEnv:
 
     def reset(self) -> np.ndarray:
         cfg = self.cfg
-        self.fleet: List[DeviceState] = make_fleet(cfg.n_devices, cfg.seed)
-        for d in self.fleet:
-            d.remaining = d.profile.battery * cfg.energy_scale
+        fleet = make_fleet_state(cfg.n_devices, cfg.seed, backend="numpy")
+        self.fleet: FleetState = fleet.replace(
+            remaining=fleet.battery * cfg.energy_scale)
         self.t = 0
         self.progress = 0.0
         self.acc = self.proxy(0.0)
-        self.e_prev = total_remaining(self.fleet)
+        self.e_prev = fleet_total_remaining(self.fleet)
         return self._obs()
 
     def _obs(self) -> np.ndarray:
-        return np.stack([obs_vector(d, self.t, self.cfg.n_rounds)
-                         for d in self.fleet])
+        return fleet_obs(self.fleet, self.t, self.cfg.n_rounds)
 
     @property
     def state(self) -> np.ndarray:
@@ -75,36 +80,34 @@ class FLEnv:
 
     def step(self, actions: np.ndarray):
         cfg = self.cfg
-        t_round, useful = 0.0, 0.0
-        dropouts = 0
-        for i, a in enumerate(np.asarray(actions)):
-            a = int(a)
-            if a >= cfg.n_models:
-                continue
-            dev = self.fleet[i]
-            if not dev.alive:
-                continue
-            t_tra, t_com, e_tra, e_com = round_cost(
-                dev, cfg.model_bytes[a], cfg.model_fractions[a],
-                cfg.local_epochs)
-            if not charge(dev, e_tra, e_com):
-                dropouts += 1
-                continue                      # wasted energy, no contribution
-            t_round = max(t_round, t_tra + t_com)
-            # contribution to global-model progress ~ data x submodel depth
-            useful += (dev.data_size / 1000.0) * cfg.model_fractions[a]
+        a = np.asarray(actions, np.int64)
+        active = (a < cfg.n_models) & np.asarray(self.fleet.alive)
+        m_idx = np.clip(a, 0, cfg.n_models - 1)
+        rows = np.arange(len(self.fleet))
+        t_tra, t_com, e_tra, e_com = fleet_cost_matrix(
+            self.fleet, cfg.model_bytes, cfg.model_fractions,
+            cfg.local_epochs)
+        need = (e_tra + e_com)[rows, m_idx]
+        self.fleet, ok = fleet_charge(self.fleet, need, active)
+        dropouts = int((active & ~ok).sum())
+        t_round = float(np.max((t_tra + t_com)[rows, m_idx],
+                               where=ok, initial=0.0))
+        # contribution to global-model progress ~ data x submodel depth
+        useful = float(np.sum(
+            (np.asarray(self.fleet.data_size) / 1000.0)
+            * np.asarray(cfg.model_fractions)[m_idx], where=ok, initial=0.0))
 
         self.progress += 0.25 * useful
         new_acc = self.proxy(self.progress)
-        e_now = total_remaining(self.fleet)
+        e_now = fleet_total_remaining(self.fleet)
         w1, w2, w3 = cfg.reward_weights
         reward = (w1 * (new_acc - self.acc) - w2 * (self.e_prev - e_now)
                   - w3 * (t_round / 60.0))
         self.acc, self.e_prev = new_acc, e_now
         self.t += 1
         done = (self.t >= cfg.n_rounds
-                or not any(d.alive for d in self.fleet))
+                or not bool(np.asarray(self.fleet.alive).any()))
         info = {"acc": self.acc, "energy": e_now, "round_time": t_round,
-                "alive": sum(d.alive for d in self.fleet),
+                "alive": int(np.asarray(self.fleet.alive).sum()),
                 "dropouts": dropouts}
         return self._obs(), float(reward), done, info

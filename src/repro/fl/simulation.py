@@ -6,6 +6,11 @@ global model under an energy budget, with the configured dual-selection
 strategy.  Returns a full history for the benchmark harnesses (accuracy per
 exit per round, remaining energy, running time, fleet survival).
 
+The fleet lives in the vectorized :class:`repro.core.fleet.FleetState`
+engine (jax backend): per-round selection masks, Eq. 5/7 cost evaluation,
+and battery charging are a few jitted batched kernels, so fleets of 256+
+devices (RQ3 / Fig. 6) cost the same per-round Python overhead as 10.
+
 Method arms:
     method="drfl"      selector in {marl, greedy, random, static}
     method="heterofl"  (greedy energy-aware model choice per the paper's
@@ -16,13 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.energy import (DeviceState, charge, make_fleet, round_cost,
-                               total_remaining)
+from repro.core.fleet import (FleetState, fleet_charge_jit, fleet_connect,
+                              fleet_cost_matrix_jit, fleet_disconnect,
+                              fleet_total_remaining, make_fleet_state)
 from repro.core.selection import (GreedySelector, MarlSelector, RandomSelector,
                                   SelectorBase, StaticTierSelector)
 from repro.data.partition import dirichlet_partition
@@ -92,7 +99,6 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> Dict:
 
 def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
               seed_offset: int = 0):
-    rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
 
     # --- data: synthetic CIFAR-like, Dirichlet non-IID split ---------------
@@ -104,15 +110,14 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
     parts = dirichlet_partition(y_tr, cfg.n_devices + cfg.hotplug_n,
                                 cfg.alpha, cfg.seed)
 
-    # --- fleet + global model ----------------------------------------------
+    # --- fleet (vectorized SoA engine) + global model ----------------------
     n_total = cfg.n_devices + cfg.hotplug_n
-    fleet = make_fleet(n_total, cfg.seed,
-                       data_sizes=[len(p) for p in parts])
-    for d in fleet:
-        d.remaining = d.profile.battery * cfg.energy_scale
-    for d in fleet[cfg.n_devices:]:     # hot-plug devices: not yet connected
-        d.alive = False
-        d.remaining = 0.0
+    fleet = make_fleet_state(n_total, cfg.seed,
+                             data_sizes=[len(p) for p in parts],
+                             backend="jax")
+    fleet = fleet.replace(remaining=fleet.battery * cfg.energy_scale)
+    if cfg.hotplug_n:                   # hot-plug devices: not yet connected
+        fleet = fleet_disconnect(fleet, cfg.n_devices)
     global_params = cnn.init(key, cfg.num_classes, width_mult=cfg.width_mult)
     M = cnn.num_submodels()
     # Energy/time accounting (Eq. 5 & 7) is calibrated to the PAPER-scale
@@ -122,14 +127,15 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
     ref_params = jax.eval_shape(
         lambda k: cnn.init(k, cfg.num_classes, width_mult=1.0),
         jax.random.PRNGKey(0))
-    sizes = [sum(x.size * x.dtype.itemsize
-                 for x in jax.tree.leaves(cnn.submodel_param_tree(ref_params, m)))
-             for m in range(M)]
+    sizes = tuple(
+        sum(x.size * x.dtype.itemsize
+            for x in jax.tree.leaves(cnn.submodel_param_tree(ref_params, m)))
+        for m in range(M))
     full_flops = cnn.flops_per_sample(M - 1, 32, 1.0)
-    fractions = [cnn.flops_per_sample(m, 32, 1.0) / full_flops for m in range(M)]
+    fractions = tuple(cnn.flops_per_sample(m, 32, 1.0) / full_flops
+                      for m in range(M))
     if selector is None:
         selector = _make_selector(cfg, M)
-    k = max(1, int(round(cfg.participation * cfg.n_devices)))
     hist_hotplug_done = False
 
     marl = selector if isinstance(selector, MarlSelector) else None
@@ -145,8 +151,9 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
             "alive": [], "participants": [], "model_choices": [],
             "reward": [], "wall_clock": [], "dropouts": 0}
     prev_acc = float(np.mean(fl_server.evaluate(global_params, x_val, y_val)))
-    e_prev = total_remaining(fleet)
+    e_prev = fleet_total_remaining(fleet)
     w1, w2, w3 = cfg.reward_weights
+    rows = np.arange(n_total)
 
     for t in range(cfg.n_rounds):
         t0 = time.time()
@@ -155,27 +162,47 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
             # paper Step 1 hot-plug: new devices connect, receive the global
             # model (implicit — clients always pull W_t), start with full
             # batteries
-            for d in fleet[cfg.n_devices:]:
-                d.alive = True
-                d.remaining = d.profile.battery * cfg.energy_scale
+            fleet = fleet_connect(fleet, cfg.n_devices, cfg.energy_scale)
             hist_hotplug_done = True
-        sel = selector.select(fleet, t, k, sizes, fractions)
-        deltas, idxs, weights, fracs_used = [], [], [], []
-        t_round = 0.0
+        # Top-K budget tracks the CONNECTED fleet: once hot-plug devices
+        # join, the participation fraction applies to all of them (computing
+        # k from cfg.n_devices alone would silently shrink the effective
+        # fraction after the join round).
+        n_connected = cfg.n_devices + (cfg.hotplug_n if hist_hotplug_done
+                                       else 0)
+        k = max(1, int(round(cfg.participation * n_connected)))
+        sel = selector.select(fleet, t, k, sizes, fractions,
+                              cfg.local_epochs, cfg.batch_size)
+
+        # --- vectorized energy accounting: price every (device, model) pair
+        # in one jitted kernel, charge the whole fleet in one shot ----------
+        choice = np.asarray(sel.model_choice, np.int64)
+        active = choice >= 0
+        m_idx = np.clip(choice, 0, M - 1)
+        t_tra_m, t_com_m, e_tra_m, e_com_m = fleet_cost_matrix_jit(
+            fleet, sizes, fractions, cfg.local_epochs, cfg.batch_size)
+        need = np.asarray(e_tra_m + e_com_m)[rows, m_idx]
+        t_cost = np.asarray(t_tra_m + t_com_m)[rows, m_idx]
+        fleet, ok = fleet_charge_jit(fleet, jnp.asarray(need),
+                                     jnp.asarray(active))
+        ok = np.asarray(ok)
+        hist["dropouts"] += int((active & ~ok).sum())
+        survivors = active & ok
+        t_round = float(t_cost[survivors].max()) if survivors.any() else 0.0
+
+        # --- local training on the surviving participants ------------------
+        deltas, idxs, weights = [], [], []
         for i in sel.participants:
-            m = sel.model_choice[i]
-            if m < 0:
-                continue
-            dev = fleet[i]
-            t_tra, t_com, e_tra, e_com = round_cost(
-                dev, sizes[m], fractions[m], cfg.local_epochs, cfg.batch_size)
-            alive = charge(dev, e_tra, e_com)
-            if not alive:
-                hist["dropouts"] += 1
+            if not survivors[i]:
                 continue                     # wasted energy, no contribution
-            t_round = max(t_round, t_tra + t_com)
+            m = int(choice[i])
             xi = x_tr[parts[i]]
             yi = y_tr[parts[i]]
+            if len(xi) == 0:
+                # large-fleet Dirichlet splits can leave a device with no
+                # local data: it still paid the round's (mostly comm)
+                # energy but has nothing to contribute
+                continue
             upd_seed = cfg.seed * 1000 + t * 100 + i
             if cfg.method == "drfl":
                 d_, _ = fl_client.drfl_client_update(
@@ -204,7 +231,7 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
 
         accs = fl_server.evaluate(global_params, x_val, y_val)
         acc = float(np.mean(accs))
-        e_now = total_remaining(fleet)
+        e_now = fleet_total_remaining(fleet)
         reward = (w1 * (acc - prev_acc) - w2 * (e_prev - e_now)
                   - w3 * (t_round / 60.0))
         selector.observe_reward(reward)
@@ -219,20 +246,21 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
                     if batch:
                         marl.learner.update(batch)
 
+        alive_now = int(np.asarray(fleet.alive).sum())
         hist["acc"].append(np.asarray(accs))
         hist["acc_mean"].append(acc)
         hist["energy"].append(e_now)
         hist["round_time"].append(t_round)
-        hist["alive"].append(sum(d.alive for d in fleet))
+        hist["alive"].append(alive_now)
         hist["participants"].append(list(sel.participants))
         hist["model_choices"].append([sel.model_choice[i] for i in sel.participants])
         hist["reward"].append(reward)
         hist["wall_clock"].append(time.time() - t0)
         if verbose:
             print(f"  round {t:3d}: acc={acc:.3f} exits="
-                  f"{np.round(np.asarray(accs), 3)} alive={hist['alive'][-1]}"
+                  f"{np.round(np.asarray(accs), 3)} alive={alive_now}"
                   f" energy={e_now:,.0f}J time={t_round:.1f}s r={reward:+.2f}")
-        if hist["alive"][-1] == 0:
+        if alive_now == 0:
             break
 
     hist["final_acc"] = hist["acc"][-1] if hist["acc"] else np.zeros(4)

@@ -1,0 +1,258 @@
+"""FleetState vectorized engine vs the DeviceState scalar reference.
+
+Parity contract: the numpy (float64) backend must match the scalar path
+BIT-FOR-BIT — costs, affordability masks, charge outcomes, observations —
+on a seeded heterogeneous fleet with dead/drained/mode-tuned devices.
+The jax backend must agree to float32 tolerance with identical boolean
+decisions.  Plus: selector equivalence across input types, the cost-model
+bugfixes (configured epochs priced into the mask, k tracking the connected
+fleet), and a 256-device run_simulation smoke."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import energy
+from repro.core.energy import DeviceProfile, DeviceState, make_fleet
+from repro.core.fleet import (FleetState, as_fleet_state, fleet_affordability,
+                              fleet_charge, fleet_charge_jit,
+                              fleet_connect, fleet_cost_matrix,
+                              fleet_cost_matrix_jit, fleet_disconnect,
+                              fleet_round_cost, fleet_total_remaining,
+                              make_fleet_state)
+from repro.core.selection import (GreedySelector, MarlSelector,
+                                  StaticTierSelector, fleet_obs, obs_vector)
+
+SIZES = (2.8e6, 8.4e6, 22.5e6, 44.8e6)
+FRACS = (0.11, 0.3, 0.72, 1.0)
+
+
+def _seeded_devices(n=33, seed=7):
+    devs = make_fleet(n, seed=seed)
+    devs[3].alive = False                 # dead
+    devs[5].remaining = 10.0              # nearly drained
+    devs[8].mode = "turbo"                # mode-tuned
+    if n > 13:
+        devs[11].mode = "eco"
+        devs[13].remaining = 0.0          # drained but still alive
+    return devs
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit parity (numpy float64 backend)
+# ---------------------------------------------------------------------------
+
+
+def test_cost_matrix_parity_bitexact():
+    devs = _seeded_devices()
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    t_tra, t_com, e_tra, e_com = fleet_cost_matrix(fleet, SIZES, FRACS,
+                                                   local_epochs=5)
+    for i, d in enumerate(devs):
+        for m in range(len(SIZES)):
+            ref = energy.round_cost(d, SIZES[m], FRACS[m], local_epochs=5)
+            assert (t_tra[i, m], t_com[i, m], e_tra[i, m], e_com[i, m]) \
+                == ref, (i, m)
+
+
+def test_round_cost_single_model_parity_bitexact():
+    devs = _seeded_devices()
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    t_tra, t_com, e_tra, e_com = fleet_round_cost(fleet, SIZES[2], FRACS[2],
+                                                  local_epochs=3)
+    for i, d in enumerate(devs):
+        assert (t_tra[i], t_com[i], e_tra[i], e_com[i]) \
+            == energy.round_cost(d, SIZES[2], FRACS[2], local_epochs=3), i
+
+
+def test_affordability_parity_bitexact():
+    devs = _seeded_devices()
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    got = fleet_affordability(fleet, SIZES, FRACS, local_epochs=5)
+    M = len(SIZES)
+    ref = np.zeros((len(devs), M + 1), bool)
+    ref[:, M] = True                      # abstain always legal
+    for i, d in enumerate(devs):
+        if not d.alive:
+            continue
+        for m in range(M):
+            _, _, e_tra, e_com = energy.round_cost(d, SIZES[m], FRACS[m],
+                                                   local_epochs=5)
+            ref[i, m] = (e_tra + e_com) < d.remaining
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+def test_charge_parity_bitexact():
+    devs = _seeded_devices()
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    # price model 1 for everyone; activate a mixed subset incl. the dead and
+    # the drained devices
+    _, _, e_tra, e_com = fleet_round_cost(fleet, SIZES[1], FRACS[1])
+    need = np.asarray(e_tra + e_com)
+    active = np.arange(len(devs)) % 3 != 1
+    ref_devs = copy.deepcopy(devs)
+    ref_ok = np.zeros(len(devs), bool)
+    for i, d in enumerate(ref_devs):
+        if active[i]:
+            ref_ok[i] = energy.charge(d, float(e_tra[i]), float(e_com[i]))
+    new_fleet, ok = fleet_charge(fleet, need, active)
+    np.testing.assert_array_equal(np.asarray(ok), ref_ok)
+    np.testing.assert_array_equal(
+        np.asarray(new_fleet.remaining),
+        np.array([d.remaining for d in ref_devs]))
+    np.testing.assert_array_equal(
+        np.asarray(new_fleet.alive), np.array([d.alive for d in ref_devs]))
+    # input fleet untouched (functional kernel)
+    assert float(fleet.remaining[0]) == devs[0].remaining
+    assert fleet_total_remaining(new_fleet) == pytest.approx(
+        energy.total_remaining(ref_devs))
+
+
+def test_obs_parity_bitexact():
+    devs = _seeded_devices()
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    got = fleet_obs(fleet, 4, 20)
+    ref = np.stack([obs_vector(d, 4, 20) for d in devs])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_device_roundtrip_preserves_state():
+    devs = _seeded_devices()
+    back = FleetState.from_devices(devs, backend="numpy").to_devices()
+    for a, b in zip(devs, back):
+        assert (a.profile, a.remaining, a.data_size, a.mode, a.alive) \
+            == (b.profile, b.remaining, b.data_size, b.mode, b.alive)
+
+
+# ---------------------------------------------------------------------------
+# jax backend: float32-close values, identical decisions
+# ---------------------------------------------------------------------------
+
+
+def test_jax_backend_matches_numpy_reference():
+    devs = _seeded_devices()
+    f_np = FleetState.from_devices(devs, backend="numpy")
+    f_jx = FleetState.from_devices(devs, backend="jax")
+    ref = fleet_cost_matrix(f_np, SIZES, FRACS)
+    got = fleet_cost_matrix_jit(f_jx, SIZES, FRACS, 5, 32)
+    for r, g in zip(ref, got):
+        np.testing.assert_allclose(np.asarray(g), r, rtol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(fleet_affordability(f_jx, SIZES, FRACS)),
+        np.asarray(fleet_affordability(f_np, SIZES, FRACS)))
+    _, _, e_tra, e_com = fleet_round_cost(f_np, SIZES[0], FRACS[0])
+    need = np.asarray(e_tra + e_com)
+    active = np.ones(len(devs), bool)
+    ref_fleet, ref_ok = fleet_charge(f_np, need, active)
+    jx_fleet, jx_ok = fleet_charge_jit(f_jx, need.astype(np.float32), active)
+    np.testing.assert_array_equal(np.asarray(jx_ok), np.asarray(ref_ok))
+    np.testing.assert_array_equal(np.asarray(jx_fleet.alive),
+                                  np.asarray(ref_fleet.alive))
+    np.testing.assert_allclose(np.asarray(jx_fleet.remaining),
+                               np.asarray(ref_fleet.remaining), rtol=1e-5)
+
+
+def test_connect_disconnect():
+    fleet = make_fleet_state(8, seed=0, backend="numpy")
+    fleet = fleet_disconnect(fleet, 5)
+    assert list(np.asarray(fleet.alive)) == [True] * 5 + [False] * 3
+    assert np.asarray(fleet.remaining)[5:].sum() == 0.0
+    fleet = fleet_connect(fleet, 5, energy_scale=0.5)
+    assert bool(np.asarray(fleet.alive).all())
+    np.testing.assert_array_equal(np.asarray(fleet.remaining)[5:],
+                                  np.asarray(fleet.battery)[5:] * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# selectors: DeviceState sequence and FleetState inputs are interchangeable
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_selector_same_on_devices_and_fleet():
+    devs = _seeded_devices()
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    a = GreedySelector().select(devs, 0, 5, list(SIZES), list(FRACS))
+    b = GreedySelector().select(fleet, 0, 5, list(SIZES), list(FRACS))
+    assert a.participants == b.participants
+    assert a.model_choice == b.model_choice
+    # greedy invariants: picks only alive+affordable, largest model wins
+    for i in a.participants:
+        assert devs[i].alive
+        _, _, e_tra, e_com = energy.round_cost(
+            devs[i], SIZES[a.model_choice[i]], FRACS[a.model_choice[i]])
+        assert e_tra + e_com < devs[i].remaining
+
+
+def test_marl_selector_same_on_devices_and_fleet():
+    devs = _seeded_devices(n=10, seed=1)
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    sa = MarlSelector(10, 4, n_rounds=20, seed=0)
+    sb = MarlSelector(10, 4, n_rounds=20, seed=0)
+    a = sa.select(devs, 0, 3, list(SIZES), list(FRACS))
+    b = sb.select(fleet, 0, 3, list(SIZES), list(FRACS))
+    assert a.participants == b.participants
+    assert a.model_choice == b.model_choice
+    np.testing.assert_array_equal(a.q_values, b.q_values)
+
+
+def test_static_selector_uses_fleet_tiers():
+    devs = _seeded_devices(n=12, seed=2)
+    fleet = FleetState.from_devices(devs, backend="numpy")
+    sel = StaticTierSelector(seed=0).select(fleet, 0, 6, list(SIZES),
+                                            list(FRACS))
+    for i in sel.participants:
+        expect = min(StaticTierSelector.TIER_MODEL[devs[i].profile.tier], 3)
+        assert sel.model_choice[i] == expect
+
+
+# ---------------------------------------------------------------------------
+# cost-model bugfixes
+# ---------------------------------------------------------------------------
+
+
+def test_affordability_prices_configured_epochs():
+    """The action mask must reflect the energy the round will actually
+    deduct: a device that can afford 1 local epoch but not 50 is selectable
+    only under the former."""
+    prof = DeviceProfile.from_tier("medium")
+    dev = DeviceState(profile=prof, remaining=200.0, data_size=1000)
+    g = GreedySelector()
+    cheap = g.select([dev], 0, 1, [1e5], [1.0], local_epochs=1)
+    dear = g.select([dev], 0, 1, [1e5], [1.0], local_epochs=50)
+    assert cheap.participants == [0]
+    assert dear.participants == []
+    fleet = as_fleet_state([dev])
+    assert bool(fleet_affordability(fleet, [1e5], [1.0], local_epochs=1)[0, 0])
+    assert not bool(
+        fleet_affordability(fleet, [1e5], [1.0], local_epochs=50)[0, 0])
+
+
+def test_simulation_k_tracks_connected_fleet():
+    """Participation fraction applies to the connected fleet: after hot-plug
+    the Top-K budget must grow with it (it was previously pinned to
+    cfg.n_devices)."""
+    from repro.fl import FLConfig, run_simulation
+    cfg = FLConfig(n_devices=4, n_rounds=3, participation=1.0, n_train=600,
+                   local_epochs=1, method="drfl", selector="greedy", seed=0,
+                   hotplug_round=1, hotplug_n=4)
+    h = run_simulation(cfg)
+    assert len(h["participants"][0]) <= 4
+    assert max(len(p) for p in h["participants"][1:]) == 8
+
+
+# ---------------------------------------------------------------------------
+# scale smoke
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_run_simulation_256_devices_smoke():
+    from repro.fl import FLConfig, run_simulation
+    cfg = FLConfig(n_devices=256, n_rounds=2, participation=0.02,
+                   n_train=2000, local_epochs=1, method="drfl",
+                   selector="greedy", seed=0, energy_scale=0.05)
+    h = run_simulation(cfg)
+    assert len(h["acc_mean"]) == 2
+    assert np.isfinite(h["acc_mean"]).all()
+    assert 0 < h["alive"][-1] <= 256
+    assert all(len(p) <= max(1, round(0.02 * 256)) for p in h["participants"])
