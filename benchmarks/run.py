@@ -2,8 +2,9 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One harness per paper artifact (Table 1, Fig. 5, Fig. 6, Table 2), plus the
-kernel microbenches and the roofline report over the dry-run artifacts.
-REPRO_BENCH_FAST=0 switches to the paper-scale (overnight) configuration.
+sync-vs-async round-engine comparison, the kernel microbenches and the
+roofline report over the dry-run artifacts.  REPRO_BENCH_FAST=0 switches to
+the paper-scale (overnight) configuration.
 """
 from __future__ import annotations
 
@@ -13,15 +14,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig5_energy, fig6_scalability, fleet_bench,
-                            kernels_bench, roofline, table1_accuracy,
-                            table2_valratio)
+    from benchmarks import (async_bench, fig5_energy, fig6_scalability,
+                            fleet_bench, kernels_bench, roofline,
+                            table1_accuracy, table2_valratio)
     print("name,us_per_call,derived")
     suites = [
         ("table1", table1_accuracy.main),
         ("fig5", fig5_energy.main),
         ("fig6", fig6_scalability.main),
         ("table2", table2_valratio.main),
+        ("async", async_bench.main),
         ("kernels", kernels_bench.main),
         ("fleet", fleet_bench.main),
         ("roofline", roofline.main),

@@ -134,7 +134,8 @@ _FLEET_EXPORTS = ("FleetState", "as_fleet_state", "make_fleet_state",
                   "fleet_round_cost", "fleet_cost_matrix",
                   "fleet_affordability", "fleet_charge",
                   "fleet_total_remaining", "fleet_connect",
-                  "fleet_disconnect", "set_modes")
+                  "fleet_disconnect", "fleet_idle", "fleet_set_busy",
+                  "set_modes")
 
 
 def __getattr__(name):

@@ -43,7 +43,7 @@ Array = Any  # np.ndarray | jax.Array — kernels are backend-generic
 # Array fields, in constructor order (tiers/modes are static aux data).
 _ARRAY_FIELDS = ("compute", "p_train", "p_com", "bandwidth", "battery",
                  "remaining", "data_size", "mode_compute", "mode_power",
-                 "alive")
+                 "alive", "busy_until")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -67,8 +67,17 @@ class FleetState:
     mode_compute: Array       # POWER_MODES compute multiplier
     mode_power: Array         # POWER_MODES power multiplier
     alive: Array              # bool
+    busy_until: Array = None  # per-device virtual clock (sim seconds): the
+                              # device is mid-task until this time; <= now
+                              # means idle/dispatchable (async round engine)
     tiers: Tuple[str, ...] = ()
     modes: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.busy_until is None:
+            xp = jnp if isinstance(self.remaining, jax.Array) else np
+            self.busy_until = xp.zeros(np.shape(self.remaining),
+                                       self.remaining.dtype)
 
     # --- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
@@ -233,15 +242,37 @@ def fleet_total_remaining(fleet: FleetState) -> float:
 
 
 def fleet_connect(fleet: FleetState, start: int,
-                  energy_scale: float = 1.0) -> FleetState:
+                  energy_scale: float = 1.0, now: float = 0.0) -> FleetState:
     """Hot-plug (paper §4.2 Step 1): devices [start:] come online with fresh
-    (scaled) batteries."""
+    (scaled) batteries, idle as of sim time ``now`` (immediately
+    dispatchable by the async engine at the join event)."""
     xp = _xp(fleet)
     joins = xp.arange(len(fleet)) >= start
     return fleet.replace(
         remaining=xp.where(joins, fleet.battery * energy_scale,
                            fleet.remaining),
-        alive=fleet.alive | joins)
+        alive=fleet.alive | joins,
+        busy_until=xp.where(joins, _aslike(fleet, now), fleet.busy_until))
+
+
+def fleet_idle(fleet: FleetState, now: float) -> np.ndarray:
+    """[n] bool host-side mask: alive and not mid-task at sim time ``now`` —
+    the dispatchable set for the event-driven engine."""
+    return (np.asarray(fleet.alive)
+            & (np.asarray(fleet.busy_until) <= now + 1e-9))
+
+
+def fleet_set_busy(fleet: FleetState, indices, until) -> FleetState:
+    """Mark ``indices`` busy until the given sim times (task completion);
+    backend-generic functional update of the virtual clocks.
+
+    The clocks take the fleet's dtype — float32 on the jax backend (x64
+    disabled), whose resolution degrades at large sim times.  The async
+    engine therefore keeps its authoritative clocks host-side in float64
+    and treats this field as an observability mirror."""
+    busy = np.asarray(fleet.busy_until).copy()
+    busy[np.asarray(indices, np.int64)] = until
+    return fleet.replace(busy_until=_aslike(fleet, busy))
 
 
 def fleet_disconnect(fleet: FleetState, start: int) -> FleetState:

@@ -49,7 +49,13 @@ class SelectorBase:
                local_epochs: int = 5, batch_size: int = 32) -> Selection:
         raise NotImplementedError
 
-    def observe_reward(self, reward: float):
+    def observe_reward(self, reward: float, sim_time: float = None):
+        """Credit the reward for the most recent ``select``.
+
+        Under the event-driven engine this fires at EVENT time — when the
+        dispatch's cohort of updates has arrived and been aggregated — with
+        ``sim_time`` the fleet's virtual clock at that moment, rather than
+        at a synchronous round barrier."""
         pass
 
 
@@ -145,7 +151,9 @@ class MarlSelector(SelectorBase):
         return Selection(participants=chosen, model_choice=model_choice,
                          q_values=qv)
 
-    def observe_reward(self, reward: float):
+    def observe_reward(self, reward: float, sim_time: float = None):
+        # QMIX is time-index-agnostic: only the reward ORDER (aligned with
+        # select calls by the engine's in-dispatch-order commits) matters
         self.ep_rewards.append(float(reward))
 
     def episode_arrays(self, final_devices, round_idx):

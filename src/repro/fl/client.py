@@ -26,6 +26,18 @@ from repro.data.loader import epoch_batches
 from repro.models import cnn
 
 
+def client_update_seed(base_seed: int, round_idx: int, device_idx: int) -> int:
+    """Collision-free per-(round, device) seed for local training.
+
+    The old ``base*1000 + t*100 + i`` mix collided across rounds for any
+    ``i >= 100`` (every 100+ device fleet), silently correlating client
+    batch orders.  ``SeedSequence`` hashes the entropy tuple, so distinct
+    (base, round, device) triples map to distinct, well-mixed streams."""
+    return int(np.random.SeedSequence(
+        entropy=(int(base_seed), int(round_idx), int(device_idx))
+    ).generate_state(1)[0])
+
+
 def _ce(logits, y):
     lse = jax.nn.logsumexp(logits, axis=-1)
     tgt = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]

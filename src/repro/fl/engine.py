@@ -1,0 +1,615 @@
+"""Event-driven FL round engine: sync (barrier) and async (timeline) modes.
+
+The paper's §4.2 workflow assumes devices come and go on their own clocks,
+but a synchronous round loop is a barrier: every round waits ``max(t_cost)``
+over its participants, so one slow straggler sets the fleet's wall-clock —
+the "wooden barrel effect" DR-FL is supposed to beat.  This module replaces
+the monolithic loop with a scheduler over *events* on a simulated timeline:
+
+* ``mode="sync"``  — one DISPATCH + one barrier COMPLETION per round; a
+  verbatim port of the legacy loop, bit-for-bit identical to the frozen
+  reference (:func:`repro.fl.simulation._run_once_reference`, enforced by
+  ``tests/test_engine.py``).
+* ``mode="async"`` — dispatch (selection + energy charge at send time) and
+  completion (delta arrival + staleness-aware aggregation at finish time)
+  are separate events on a heap keyed by per-device virtual clocks
+  (``FleetState.busy_until``).  The server keeps ~k tasks in flight: each
+  completion aggregates immediately (FedAsync-style, down-weighted by
+  :func:`repro.fl.server.staleness_scale`) and back-fills the freed slot,
+  so no device ever waits at a barrier.  Hot-plug joins, dropouts, and
+  battery depletion are timeline events, not round-boundary hacks.
+
+Async bookkeeping groups completions into *virtual rounds* of k tasks so
+histories stay row-comparable with sync runs; rewards are credited at
+EVENT time (energy at dispatch, duration and accuracy-delta at arrival)
+and committed to the selector in dispatch order, which keeps the MARL
+episode trace (obs/action/reward) aligned.
+
+Fairness accounting reported in the history (``benchmarks/async_bench.py``):
+
+* ``idle_time`` — straggler wait: how long each finished client update sat
+  before entering the global model.  Sync pays ``t_round - t_cost_i`` per
+  surviving participant (the barrier); async aggregates at the completion
+  event, so the wait is zero by construction (computed, not assumed, so
+  the metric stays honest if scheduling ever batches arrivals).
+* ``wait_for_work`` (async only) — time between a device completing a task
+  and its NEXT dispatch; spare capacity, the analogue of sync devices
+  sitting out a round, reported for scheduling diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fleet import (FleetState, fleet_charge_jit, fleet_connect,
+                              fleet_cost_matrix_jit, fleet_disconnect,
+                              fleet_is_jax, fleet_set_busy,
+                              fleet_total_remaining, make_fleet_state)
+from repro.core.selection import MarlSelector
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import synthetic_image_dataset
+from repro.fl import client as fl_client
+from repro.fl import server as fl_server
+from repro.models import cnn
+
+
+# ---------------------------------------------------------------------------
+# shared episode setup (data shards, fleet, global model, cost calibration)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class World:
+    """Everything one simulation episode needs, built once per episode."""
+    x_tr: np.ndarray
+    y_tr: np.ndarray
+    x_val: np.ndarray
+    y_val: np.ndarray
+    parts: List[np.ndarray]
+    fleet: FleetState
+    global_params: Any
+    n_models: int
+    sizes: tuple
+    fractions: tuple
+    n_total: int
+
+
+def build_world(cfg) -> World:
+    """Exact port of the legacy ``_run_once`` setup (shared by the engine
+    and the frozen reference loop, so parity starts from identical state)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    x, y = synthetic_image_dataset(cfg.n_train, cfg.num_classes, hw=cfg.hw,
+                                   noise=cfg.noise, seed=cfg.seed)
+    n_val = max(64, int(cfg.n_val_fraction * cfg.n_train))
+    x_val, y_val = x[:n_val], y[:n_val]          # server-side validation set
+    x_tr, y_tr = x[n_val:], y[n_val:]
+    parts = dirichlet_partition(y_tr, cfg.n_devices + cfg.hotplug_n,
+                                cfg.alpha, cfg.seed)
+
+    n_total = cfg.n_devices + cfg.hotplug_n
+    fleet = make_fleet_state(n_total, cfg.seed,
+                             data_sizes=[len(p) for p in parts],
+                             backend="jax")
+    fleet = fleet.replace(remaining=fleet.battery * cfg.energy_scale)
+    if cfg.hotplug_n:                   # hot-plug devices: not yet connected
+        fleet = fleet_disconnect(fleet, cfg.n_devices)
+    global_params = cnn.init(key, cfg.num_classes, width_mult=cfg.width_mult)
+    M = cnn.num_submodels()
+    # Energy/time accounting (Eq. 5 & 7) is calibrated to the PAPER-scale
+    # backbone (full-width ResNet-18 on 32x32): the slim CNN is only the
+    # CPU-budget compute proxy; batteries must see paper-scale costs for the
+    # wooden-barrel dynamics to reproduce.
+    ref_params = jax.eval_shape(
+        lambda k: cnn.init(k, cfg.num_classes, width_mult=1.0),
+        jax.random.PRNGKey(0))
+    sizes = tuple(
+        sum(x.size * x.dtype.itemsize
+            for x in jax.tree.leaves(cnn.submodel_param_tree(ref_params, m)))
+        for m in range(M))
+    full_flops = cnn.flops_per_sample(M - 1, 32, 1.0)
+    fractions = tuple(cnn.flops_per_sample(m, 32, 1.0) / full_flops
+                      for m in range(M))
+    return World(x_tr=x_tr, y_tr=y_tr, x_val=x_val, y_val=y_val, parts=parts,
+                 fleet=fleet, global_params=global_params, n_models=M,
+                 sizes=sizes, fractions=fractions, n_total=n_total)
+
+
+_CLIENT_FNS = {"drfl": "drfl_client_update",
+               "heterofl": "heterofl_client_update",
+               "scalefl": "scalefl_client_update"}
+
+
+def _client_update(cfg, global_params, m, xi, yi, seed):
+    fn = getattr(fl_client, _CLIENT_FNS[cfg.method])
+    return fn(global_params, m, xi, yi, epochs=cfg.local_epochs,
+              batch=cfg.batch_size, lr=cfg.lr, seed=seed)
+
+
+def sync_task_budget(cfg) -> int:
+    """Total client-task budget a sync run of ``cfg`` dispatches at most
+    (sum over rounds of the connected-fleet Top-K k) — the async engine's
+    default work budget, so both modes do the same amount of training."""
+    k_pre = max(1, int(round(cfg.participation * cfg.n_devices)))
+    if not cfg.hotplug_n:
+        return cfg.n_rounds * k_pre
+    hr = min(max(int(cfg.hotplug_round), 0), cfg.n_rounds)
+    k_post = max(1, int(round(
+        cfg.participation * (cfg.n_devices + cfg.hotplug_n))))
+    return hr * k_pre + (cfg.n_rounds - hr) * k_post
+
+
+class RoundEngine:
+    """Scheduler layer: runs one FL episode under ``cfg.engine_mode``.
+
+    ``selector`` and (for MARL) ``buffer`` are owned by the caller —
+    :func:`repro.fl.simulation.run_simulation` persists them across
+    pre-training episodes exactly as the legacy loop did.
+    """
+
+    def __init__(self, cfg, selector, buffer=None, verbose: bool = False):
+        self.cfg = cfg
+        self.selector = selector
+        self.buffer = buffer
+        self.verbose = verbose
+        self.mode = getattr(cfg, "engine_mode", "sync")
+
+    def run(self) -> Dict:
+        self.world = build_world(self.cfg)
+        if self.mode == "sync":
+            return self._run_sync()
+        if self.mode == "async":
+            return self._run_async()
+        raise ValueError(f"unknown engine_mode {self.mode!r} "
+                         "(expected 'sync' or 'async')")
+
+    # ------------------------------------------------------------------
+    # sync mode — barrier rounds, bit-for-bit the legacy loop
+    # ------------------------------------------------------------------
+
+    def _run_sync(self) -> Dict:
+        cfg, w = self.cfg, self.world
+        fleet = w.fleet
+        global_params = w.global_params
+        M = w.n_models
+        selector, buffer = self.selector, self.buffer
+        marl = selector if isinstance(selector, MarlSelector) else None
+
+        hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
+                "alive": [], "participants": [], "model_choices": [],
+                "reward": [], "wall_clock": [], "sim_time": [], "idle": [],
+                "dropouts": 0, "idle_time": 0.0, "engine": "sync"}
+        prev_acc = float(np.mean(
+            fl_server.evaluate(global_params, w.x_val, w.y_val)))
+        e_prev = fleet_total_remaining(fleet)
+        w1, w2, w3 = cfg.reward_weights
+        rows = np.arange(w.n_total)
+        sim_time = 0.0
+        n_agg = 0
+        hotplug_done = False
+
+        for t in range(cfg.n_rounds):
+            t0 = time.time()
+            if (cfg.hotplug_n and not hotplug_done
+                    and t >= cfg.hotplug_round):
+                # paper Step 1 hot-plug: new devices connect, receive the
+                # global model (implicit — clients always pull W_t), start
+                # with full batteries
+                fleet = fleet_connect(fleet, cfg.n_devices, cfg.energy_scale)
+                hotplug_done = True
+            # Top-K budget tracks the CONNECTED fleet (see ISSUE 1 fix).
+            n_connected = cfg.n_devices + (cfg.hotplug_n if hotplug_done
+                                           else 0)
+            k = max(1, int(round(cfg.participation * n_connected)))
+            sel = selector.select(fleet, t, k, w.sizes, w.fractions,
+                                  cfg.local_epochs, cfg.batch_size)
+
+            choice = np.asarray(sel.model_choice, np.int64)
+            active = choice >= 0
+            m_idx = np.clip(choice, 0, M - 1)
+            t_tra_m, t_com_m, e_tra_m, e_com_m = fleet_cost_matrix_jit(
+                fleet, w.sizes, w.fractions, cfg.local_epochs, cfg.batch_size)
+            need = np.asarray(e_tra_m + e_com_m)[rows, m_idx]
+            t_cost = np.asarray(t_tra_m + t_com_m)[rows, m_idx]
+            fleet, ok = fleet_charge_jit(fleet, jnp.asarray(need),
+                                         jnp.asarray(active))
+            ok = np.asarray(ok)
+            hist["dropouts"] += int((active & ~ok).sum())
+            survivors = active & ok
+            t_round = float(t_cost[survivors].max()) if survivors.any() else 0.0
+            # straggler wait: finished participants idle at the barrier
+            idle_round = float((t_round - t_cost[survivors]).sum())
+
+            deltas, idxs, weights = [], [], []
+            for i in sel.participants:
+                if not survivors[i]:
+                    continue                 # wasted energy, no contribution
+                m = int(choice[i])
+                xi = w.x_tr[w.parts[i]]
+                yi = w.y_tr[w.parts[i]]
+                if len(xi) == 0:
+                    # large-fleet Dirichlet splits can leave a device with
+                    # no local data: it still paid the round's (mostly comm)
+                    # energy but has nothing to contribute
+                    continue
+                upd_seed = fl_client.client_update_seed(cfg.seed, t, i)
+                d_, _ = _client_update(cfg, global_params, m, xi, yi,
+                                       upd_seed)
+                deltas.append(d_)
+                idxs.append(m)
+                weights.append(float(len(xi)))
+
+            if deltas:
+                if cfg.method == "drfl":
+                    global_params = fl_server.aggregate_drfl(
+                        global_params, deltas, idxs, weights,
+                        server_lr=cfg.server_lr)
+                else:
+                    global_params = fl_server.aggregate_sliced(
+                        global_params, deltas, weights)
+                n_agg += 1
+
+            accs = fl_server.evaluate(global_params, w.x_val, w.y_val)
+            acc = float(np.mean(accs))
+            e_now = fleet_total_remaining(fleet)
+            reward = (w1 * (acc - prev_acc) - w2 * (e_prev - e_now)
+                      - w3 * (t_round / 60.0))
+            sim_time += t_round
+            selector.observe_reward(reward, sim_time=sim_time)
+            prev_acc, e_prev = acc, e_now
+
+            if marl:
+                if (t + 1) % cfg.marl_train_every == 0 and marl.ep_rewards:
+                    obs, state, actions, rewards = marl.episode_arrays(
+                        fleet, t + 1)
+                    buffer.add_episode(obs, state, actions, rewards)
+                    for _ in range(cfg.marl_updates_per_round):
+                        batch = buffer.sample(marl.learner.cfg.batch_size)
+                        if batch:
+                            marl.learner.update(batch)
+
+            alive_now = int(np.asarray(fleet.alive).sum())
+            hist["acc"].append(np.asarray(accs))
+            hist["acc_mean"].append(acc)
+            hist["energy"].append(e_now)
+            hist["round_time"].append(t_round)
+            hist["alive"].append(alive_now)
+            hist["participants"].append(list(sel.participants))
+            hist["model_choices"].append(
+                [sel.model_choice[i] for i in sel.participants])
+            hist["reward"].append(reward)
+            hist["wall_clock"].append(time.time() - t0)
+            hist["sim_time"].append(sim_time)
+            hist["idle"].append(idle_round)
+            hist["idle_time"] += idle_round
+            if self.verbose:
+                print(f"  round {t:3d}: acc={acc:.3f} exits="
+                      f"{np.round(np.asarray(accs), 3)} alive={alive_now}"
+                      f" energy={e_now:,.0f}J time={t_round:.1f}s"
+                      f" r={reward:+.2f}")
+            if alive_now == 0:
+                break
+
+        hist["n_aggregations"] = n_agg
+        hist["sim_time_total"] = sim_time
+        return self._finalize(hist, global_params)
+
+    # ------------------------------------------------------------------
+    # async mode — event heap over per-device virtual clocks
+    # ------------------------------------------------------------------
+
+    def _run_async(self) -> Dict:
+        cfg, w = self.cfg, self.world
+        fleet = w.fleet
+        global_params = w.global_params
+        selector, buffer = self.selector, self.buffer
+        marl = selector if isinstance(selector, MarlSelector) else None
+        decay = getattr(cfg, "staleness_decay", 0.5)
+        eval_every = max(1, int(getattr(cfg, "async_eval_every", 1)))
+        horizon = float(getattr(cfg, "async_time_horizon", 0.0))
+        budget = int(getattr(cfg, "async_task_budget", 0)
+                     or sync_task_budget(cfg))
+        w1, w2, w3 = cfg.reward_weights
+        rows = np.arange(w.n_total)
+
+        hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
+                "alive": [], "participants": [], "model_choices": [],
+                "reward": [], "wall_clock": [], "sim_time": [], "idle": [],
+                "staleness": [], "task_log": [], "dropouts": 0,
+                "idle_time": 0.0, "wait_for_work": 0.0, "hotplug": None,
+                "engine": "async"}
+        acc_prev = float(np.mean(
+            fl_server.evaluate(global_params, w.x_val, w.y_val)))
+
+        state = dict(now=0.0, version=0, seq=0, vround=0,
+                     tasks_started=0, completions=0, inflight=0,
+                     n_cohorts=0, next_commit=0, last_event=0.0,
+                     hotplug_done=not cfg.hotplug_n, acc_prev=acc_prev,
+                     window_t0=0.0, window_wall0=time.time(),
+                     window_reward=0.0, window_idle=0.0)
+        heap: list = []
+        cohorts: Dict[int, dict] = {}   # one per selector.select call
+        last_done: Dict[int, float] = {}
+        window_devices: List[int] = []
+        window_models: List[int] = []
+        # authoritative virtual clocks, host-side float64: the jax-backend
+        # FleetState stores busy_until in float32 (x64 is disabled), whose
+        # ~8ms resolution at ~6.5e4 sim-seconds could mark a mid-task
+        # device idle; fleet.busy_until is kept as an observability mirror
+        busy64 = np.asarray(fleet.busy_until, np.float64).copy()
+
+        def n_connected():
+            return cfg.n_devices + (cfg.hotplug_n if state["hotplug_done"]
+                                    else 0)
+
+        def top_k():
+            return max(1, int(round(cfg.participation * n_connected())))
+
+        def credit(cid, amount):
+            cohorts[cid]["reward"] += amount
+            state["window_reward"] += amount
+
+        def commit_ready():
+            # flush cohort rewards to the selector IN DISPATCH ORDER so the
+            # MARL episode trace stays (obs_t, action_t, reward_t)-aligned
+            # even when later dispatches complete first
+            while (state["next_commit"] < state["n_cohorts"]
+                   and cohorts[state["next_commit"]]["pending"] == 0):
+                c = cohorts.pop(state["next_commit"])
+                selector.observe_reward(c["reward"], sim_time=state["now"])
+                state["next_commit"] += 1
+
+        def maybe_hotplug(force: bool = False):
+            nonlocal fleet
+            if state["hotplug_done"] or (not force
+                                         and state["vround"]
+                                         < cfg.hotplug_round):
+                return
+            now = state["now"]
+            k_before = top_k()
+            fleet = fleet_connect(fleet, cfg.n_devices, cfg.energy_scale,
+                                  now=now)
+            busy64[cfg.n_devices:] = now
+            state["hotplug_done"] = True
+            hist["hotplug"] = {
+                "sim_time": now, "vround": state["vround"],
+                "version": state["version"], "k_before": k_before,
+                "k_after": top_k(),
+                "join_remaining": [float(r) for r in np.asarray(
+                    fleet.remaining)[cfg.n_devices:]],
+            }
+
+        def try_dispatch(n_sel) -> int:
+            nonlocal fleet
+            now = state["now"]
+            idle = np.asarray(fleet.alive) & (busy64 <= now + 1e-9)
+            if not idle.any():
+                return 0
+            cid = state["n_cohorts"]
+            state["n_cohorts"] += 1
+            cohorts[cid] = {"pending": 0, "reward": 0.0}
+            alive_mask = (jnp.asarray(idle) if fleet_is_jax(fleet) else idle)
+            sel = selector.select(fleet.replace(alive=alive_mask),
+                                  state["vround"], n_sel, w.sizes,
+                                  w.fractions, cfg.local_epochs,
+                                  cfg.batch_size)
+            choice = np.asarray(sel.model_choice, np.int64)
+            active = choice >= 0
+            if active.any():
+                m_idx = np.clip(choice, 0, w.n_models - 1)
+                t_tra, t_com, e_tra, e_com = fleet_cost_matrix_jit(
+                    fleet, w.sizes, w.fractions, cfg.local_epochs,
+                    cfg.batch_size)
+                need = np.asarray(e_tra + e_com)[rows, m_idx]
+                t_cost = np.asarray(t_tra + t_com)[rows, m_idx]
+                if horizon > 0:
+                    # only send work that can land inside the time budget
+                    active &= (now + t_cost) <= horizon + 1e-9
+                allow = budget - state["tasks_started"]
+                kept = [i for i in sel.participants if active[i]][:allow]
+                active = np.zeros(w.n_total, bool)
+                active[kept] = True
+            if not active.any():
+                return 0
+            e_before = fleet_total_remaining(fleet)
+            fleet, ok = fleet_charge_jit(fleet, jnp.asarray(need),
+                                         jnp.asarray(active))
+            ok = np.asarray(ok)
+            e_after = fleet_total_remaining(fleet)
+            hist["dropouts"] += int((active & ~ok).sum())
+            # energy term at SEND time (includes batteries wasted by deaths)
+            credit(cid, -w2 * (e_before - e_after))
+            started = [i for i in sel.participants if active[i] and ok[i]]
+            if not started:
+                return 0
+            busy64[np.asarray(started)] = now + t_cost[np.asarray(started)]
+            fleet = fleet_set_busy(fleet, started,
+                                   now + t_cost[np.asarray(started)])
+            for i in started:
+                if i in last_done:            # wait-for-work since last task
+                    hist["wait_for_work"] += now - last_done[i]
+                heapq.heappush(heap, (now + float(t_cost[i]), state["seq"], {
+                    "device": i, "m": int(choice[i]),
+                    "version": state["version"], "params": global_params,
+                    "cohort": cid, "dispatch": cid, "t0": now,
+                    "t_cost": float(t_cost[i]),
+                }))
+                state["seq"] += 1
+            cohorts[cid]["pending"] = len(started)
+            state["tasks_started"] += len(started)
+            state["inflight"] += len(started)
+            return len(started)
+
+        def refill():
+            while (state["tasks_started"] < budget
+                   and state["inflight"] < top_k()):
+                if horizon > 0 and state["now"] >= horizon:
+                    break
+                n_sel = min(top_k() - state["inflight"],
+                            budget - state["tasks_started"])
+                if try_dispatch(n_sel) == 0:
+                    break
+
+        def emit_row():
+            now = state["now"]
+            accs = fl_server.evaluate(global_params, w.x_val, w.y_val)
+            acc = float(np.mean(accs))
+            # re-baseline the accuracy term here so eval_every > 1 doesn't
+            # leak un-credited progress into later event rewards
+            state["window_reward"] += w1 * (acc - state["acc_prev"])
+            state["acc_prev"] = acc
+            e_now = fleet_total_remaining(fleet)
+            alive_now = int(np.asarray(fleet.alive).sum())
+            hist["acc"].append(np.asarray(accs))
+            hist["acc_mean"].append(acc)
+            hist["energy"].append(e_now)
+            hist["round_time"].append(now - state["window_t0"])
+            hist["alive"].append(alive_now)
+            hist["participants"].append(list(window_devices))
+            hist["model_choices"].append(list(window_models))
+            hist["reward"].append(state["window_reward"])
+            hist["wall_clock"].append(time.time() - state["window_wall0"])
+            hist["sim_time"].append(now)
+            hist["idle"].append(state["window_idle"])
+            if self.verbose:
+                print(f"  vround {state['vround']:3d}: acc={acc:.3f}"
+                      f" alive={alive_now} energy={e_now:,.0f}J"
+                      f" t={now:.1f}s r={state['window_reward']:+.2f}")
+            window_devices.clear()
+            window_models.clear()
+            state["window_t0"] = now
+            state["window_wall0"] = time.time()
+            state["window_reward"] = 0.0
+            state["window_idle"] = 0.0
+            state["vround"] += 1
+
+        def process_completion(task):
+            nonlocal global_params
+            now = state["now"]
+            i = task["device"]
+            state["inflight"] -= 1
+            last_done[i] = now
+            staleness = state["version"] - task["version"]
+            cid = task["cohort"]
+            cohorts[cid]["pending"] -= 1
+            # time term pays the VIRTUAL TIME ADVANCED by this event (the
+            # gap since the previous one), not the task's own duration:
+            # gaps telescope to the window duration, so a virtual round's
+            # total time penalty matches sync's t_round / FLEnv's event
+            # gaps rather than k-fold overcharging overlapped tasks
+            credit(cid, -w3 * ((now - state["last_event"]) / 60.0))
+            state["last_event"] = now
+            # straggler wait: the update is aggregated at this very event,
+            # so it waits (now - finish_time) = 0 — computed, not assumed
+            agg_wait = now - (task["t0"] + task["t_cost"])
+            hist["idle_time"] += agg_wait
+            state["window_idle"] += agg_wait
+            xi = w.x_tr[w.parts[i]]
+            yi = w.y_tr[w.parts[i]]
+            aggregated = False
+            if len(xi):
+                seed = fl_client.client_update_seed(cfg.seed,
+                                                    task["dispatch"], i)
+                # clients train on the model snapshot they PULLED at
+                # dispatch; the server reconciles drift via staleness decay
+                delta, _ = _client_update(cfg, task["params"], task["m"],
+                                          xi, yi, seed)
+                if cfg.method == "drfl":
+                    global_params = fl_server.aggregate_drfl(
+                        global_params, [delta], [task["m"]],
+                        [float(len(xi))], server_lr=cfg.server_lr,
+                        staleness=[staleness], staleness_decay=decay)
+                else:
+                    a = fl_server.staleness_scale(staleness, decay)
+                    if a != 1.0:
+                        delta = jax.tree.map(
+                            lambda u: (u * a).astype(u.dtype), delta)
+                    global_params = fl_server.aggregate_sliced(
+                        global_params, [delta], [float(len(xi))])
+                state["version"] += 1
+                aggregated = True
+            hist["staleness"].append(staleness)
+            hist["task_log"].append({
+                "device": i, "dispatch": task["dispatch"],
+                "version": task["version"], "staleness": staleness,
+                "m": task["m"], "t_dispatch": task["t0"], "t_done": now,
+            })
+            # per-aggregation accuracy evals exist to feed event-time
+            # rewards; for non-learning selectors observe_reward is a
+            # no-op, so only the virtual-round boundary evaluates
+            if marl and aggregated and state["version"] % eval_every == 0:
+                accs = fl_server.evaluate(global_params, w.x_val, w.y_val)
+                acc = float(np.mean(accs))
+                credit(cid, w1 * (acc - state["acc_prev"]))
+                state["acc_prev"] = acc
+            window_devices.append(i)
+            window_models.append(task["m"])
+            state["completions"] += 1
+            if len(window_devices) >= top_k():
+                emit_row()
+                maybe_hotplug()
+
+        # --- timeline -------------------------------------------------
+        maybe_hotplug()      # hotplug_round == 0 joins before first dispatch
+        refill()
+        commit_ready()
+        while True:
+            if not heap:
+                if not state["hotplug_done"] \
+                        and state["tasks_started"] < budget:
+                    # no event can ever advance the virtual-round counter
+                    # to the join boundary (e.g. the whole initial fleet is
+                    # too drained to take a task), but sync mode reaches it
+                    # by ticking empty rounds — connect the joiners now so
+                    # the two modes agree on the hot-plug story
+                    maybe_hotplug(force=True)
+                    refill()
+                    commit_ready()
+                    if heap:
+                        continue
+                break
+            t_done, _, task = heapq.heappop(heap)
+            state["now"] = t_done
+            process_completion(task)
+            refill()
+            commit_ready()
+
+        if window_devices:
+            emit_row()
+        # flush cohorts whose tasks were cut by the horizon/budget
+        for c in cohorts.values():
+            c["pending"] = 0
+        commit_ready()
+
+        if marl and buffer is not None and marl.ep_rewards:
+            # event-driven runs have no natural mid-run barrier to train at
+            # (the episode trace only fully commits once in-flight cohorts
+            # land), so the learner trains at episode end with the same
+            # total update count a sync run would have used
+            obs, st, actions, rewards = marl.episode_arrays(
+                fleet, state["vround"])
+            buffer.add_episode(obs, st, actions, rewards)
+            n_updates = cfg.marl_updates_per_round * max(
+                1, state["vround"] // max(1, cfg.marl_train_every))
+            for _ in range(n_updates):
+                batch = buffer.sample(marl.learner.cfg.batch_size)
+                if batch:
+                    marl.learner.update(batch)
+
+        hist["n_tasks"] = state["tasks_started"]
+        hist["n_aggregations"] = state["version"]
+        hist["sim_time_total"] = state["now"]
+        hist["k_final"] = top_k()
+        return self._finalize(hist, global_params)
+
+    def _finalize(self, hist, global_params) -> Dict:
+        hist["final_acc"] = hist["acc"][-1] if hist["acc"] else np.zeros(4)
+        hist["best_acc"] = (np.max(np.stack(hist["acc"]), axis=0)
+                            if hist["acc"] else np.zeros(4))
+        hist["params"] = global_params
+        return hist

@@ -13,6 +13,12 @@ is a constant number of batched array ops regardless of fleet size (numpy
 float64 backend: for the small fleets policy research sweeps, dispatch
 overhead beats jit, and the dynamics match the scalar reference
 bit-for-bit).
+
+``FLEnvConfig.mode`` selects the reward clock: ``"sync"`` pays the round
+barrier (max completion time over participants), ``"async"`` mirrors the
+event-driven engine — busy devices auto-abstain via their ``busy_until``
+virtual clocks and the time term pays only the gap to the next completion
+event, so policies observe event-time rewards.
 """
 from __future__ import annotations
 
@@ -22,7 +28,8 @@ from typing import Callable, Tuple
 import numpy as np
 
 from repro.core.fleet import (FleetState, fleet_charge, fleet_cost_matrix,
-                              fleet_total_remaining, make_fleet_state)
+                              fleet_idle, fleet_total_remaining,
+                              make_fleet_state)
 from repro.core.selection import OBS_DIM, fleet_obs
 
 
@@ -43,6 +50,7 @@ class FLEnvConfig:
     energy_scale: float = 0.15
     local_epochs: int = 5
     seed: int = 0
+    mode: str = "sync"                 # sync (barrier) | async (event-time)
 
 
 class FLEnv:
@@ -51,6 +59,15 @@ class FLEnv:
     actions: int array [n_devices]; value in [0, n_models) = train that
     submodel, n_models = do not participate.  Top-K filtering is the
     CALLER's job (the paper filters by Q value; the env accepts any subset).
+
+    ``mode="sync"`` advances the clock by the round barrier ``max(t_cost)``
+    and the reward's time term pays that barrier.  ``mode="async"`` mirrors
+    the event-driven engine: devices still mid-task (``busy_until`` beyond
+    the clock) auto-abstain, the clock advances to the NEXT completion
+    event, and the reward's time term pays only that event gap — so
+    policies trained here observe event-time rewards, not barrier rewards.
+    ``info`` always carries ``sim_time`` and the round's ``idle_time``
+    (straggler wait at the barrier; zero in async mode).
     """
 
     def __init__(self, cfg: FLEnvConfig,
@@ -66,6 +83,7 @@ class FLEnv:
         self.fleet: FleetState = fleet.replace(
             remaining=fleet.battery * cfg.energy_scale)
         self.t = 0
+        self.sim_time = 0.0
         self.progress = 0.0
         self.acc = self.proxy(0.0)
         self.e_prev = fleet_total_remaining(self.fleet)
@@ -82,6 +100,9 @@ class FLEnv:
         cfg = self.cfg
         a = np.asarray(actions, np.int64)
         active = (a < cfg.n_models) & np.asarray(self.fleet.alive)
+        if cfg.mode == "async":
+            # event semantics: devices still mid-task cannot be dispatched
+            active &= fleet_idle(self.fleet, self.sim_time)
         m_idx = np.clip(a, 0, cfg.n_models - 1)
         rows = np.arange(len(self.fleet))
         t_tra, t_com, e_tra, e_com = fleet_cost_matrix(
@@ -90,8 +111,21 @@ class FLEnv:
         need = (e_tra + e_com)[rows, m_idx]
         self.fleet, ok = fleet_charge(self.fleet, need, active)
         dropouts = int((active & ~ok).sum())
-        t_round = float(np.max((t_tra + t_com)[rows, m_idx],
-                               where=ok, initial=0.0))
+        t_cost = (t_tra + t_com)[rows, m_idx]
+        t_round = float(np.max(t_cost, where=ok, initial=0.0))
+        if cfg.mode == "async":
+            # dispatched tasks run on per-device virtual clocks; the server
+            # wakes at the NEXT completion event instead of the barrier
+            done_at = np.where(ok, self.sim_time + t_cost,
+                               np.asarray(self.fleet.busy_until))
+            self.fleet = self.fleet.replace(busy_until=done_at)
+            pending = done_at[done_at > self.sim_time + 1e-9]
+            t_step = (float(pending.min()) - self.sim_time) if len(pending) \
+                else 0.0
+            idle_time = 0.0                # no barrier: no straggler wait
+        else:
+            t_step = t_round
+            idle_time = float(np.sum(t_round - t_cost, where=ok, initial=0.0))
         # contribution to global-model progress ~ data x submodel depth
         useful = float(np.sum(
             (np.asarray(self.fleet.data_size) / 1000.0)
@@ -101,13 +135,17 @@ class FLEnv:
         new_acc = self.proxy(self.progress)
         e_now = fleet_total_remaining(self.fleet)
         w1, w2, w3 = cfg.reward_weights
+        # event-time reward: the time term pays the elapsed virtual time of
+        # THIS event (the barrier in sync mode, the event gap in async)
         reward = (w1 * (new_acc - self.acc) - w2 * (self.e_prev - e_now)
-                  - w3 * (t_round / 60.0))
+                  - w3 * (t_step / 60.0))
         self.acc, self.e_prev = new_acc, e_now
         self.t += 1
+        self.sim_time += t_step
         done = (self.t >= cfg.n_rounds
                 or not bool(np.asarray(self.fleet.alive).any()))
         info = {"acc": self.acc, "energy": e_now, "round_time": t_round,
                 "alive": int(np.asarray(self.fleet.alive).sum()),
-                "dropouts": dropouts}
+                "dropouts": dropouts, "sim_time": self.sim_time,
+                "idle_time": idle_time}
         return self._obs(), float(reward), done, info

@@ -1,14 +1,16 @@
 """FL server: global-model bookkeeping, aggregation dispatch, evaluation.
 
 Aggregation arms:
-* DR-FL      — layer-aligned masked averaging (paper Step 2)
+* DR-FL      — layer-aligned masked averaging (paper Step 2); optionally
+               staleness-aware (FedAsync-style per-exit-layer decay) for
+               updates arriving late under the async round engine
 * HeteroFL   — width-slice scatter averaging
 * ScaleFL    — depth+width scatter averaging (structure-tolerant)
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,24 +48,61 @@ def evaluate(params, x_val: np.ndarray, y_val: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def cnn_update_mask(global_params, model_idx: int):
-    """Scalar 0/1 masks matching the CNN tree: stem + stages<=m + exits<=m
-    (clients deep-supervise every exit their submodel holds)."""
+def cnn_update_mask(global_params, model_idx: int, scale: float = 1.0):
+    """Scalar masks matching the CNN tree: stem + stages<=m + exits<=m
+    (clients deep-supervise every exit their submodel holds).  ``scale``
+    replaces the 1.0 of held layers — the staleness path builds decay masks
+    (value alpha_s per exit-layer) with the same structure."""
     def const(tree, v):
         return jax.tree.map(lambda _: jnp.asarray(v, jnp.float32), tree)
 
     return {
-        "stem": const(global_params["stem"], 1.0),
-        "stages": [const(s, 1.0 if i <= model_idx else 0.0)
+        "stem": const(global_params["stem"], scale),
+        "stages": [const(s, scale if i <= model_idx else 0.0)
                    for i, s in enumerate(global_params["stages"])],
-        "exits": [const(e, 1.0 if i <= model_idx else 0.0)
+        "exits": [const(e, scale if i <= model_idx else 0.0)
                   for i, e in enumerate(global_params["exits"])],
     }
 
 
+def staleness_scale(staleness: float, decay: float = 0.5) -> float:
+    """FedAsync-style polynomial staleness discount: (1 + s)^(-decay).
+
+    ``s`` counts how many aggregations advanced the global model between a
+    client's dispatch and the arrival of its delta; s = 0 (fresh) maps to
+    exactly 1.0, so the sync path is bit-for-bit unaffected."""
+    if staleness <= 0:
+        return 1.0
+    return float((1.0 + float(staleness)) ** (-float(decay)))
+
+
 def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
-                   weights: Sequence[float], server_lr: float = 1.0):
+                   weights: Sequence[float], server_lr: float = 1.0,
+                   staleness: Optional[Sequence[float]] = None,
+                   staleness_decay: float = 0.5):
+    """DR-FL layer-aligned aggregation, optionally staleness-aware.
+
+    With ``staleness`` given (one entry per delta: aggregations elapsed
+    since that client's dispatch), each stale delta is down-weighted by
+    ``staleness_scale(s, staleness_decay)`` APPLIED PER EXIT-LAYER: the
+    decay is materialized as an alpha-valued mask over exactly the
+    stages/exits the client's submodel holds and multiplied into the delta,
+    so a lone stale contributor moves a layer by alpha * update (absolute
+    FedAsync damping), not by the full update renormalized.  ``staleness``
+    of all zeros (or None) reproduces the synchronous path bit-for-bit."""
     masks = [cnn_update_mask(global_params, m) for m in model_idxs]
+    if staleness is not None and any(s > 0 for s in staleness):
+        scaled = []
+        for d, m, s in zip(deltas, model_idxs, staleness):
+            a = staleness_scale(s, staleness_decay)
+            if a == 1.0:
+                scaled.append(d)
+                continue
+            smask = cnn_update_mask(global_params, m, scale=a)
+            scaled.append(jax.tree.map(
+                lambda u, sm: (u.astype(jnp.float32) * sm).astype(u.dtype),
+                d, smask))
+        deltas = scaled
     return layerwise_aggregate(global_params, deltas, masks, weights,
                                server_lr=server_lr)
 

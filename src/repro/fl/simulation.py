@@ -6,10 +6,15 @@ global model under an energy budget, with the configured dual-selection
 strategy.  Returns a full history for the benchmark harnesses (accuracy per
 exit per round, remaining energy, running time, fleet survival).
 
-The fleet lives in the vectorized :class:`repro.core.fleet.FleetState`
-engine (jax backend): per-round selection masks, Eq. 5/7 cost evaluation,
-and battery charging are a few jitted batched kernels, so fleets of 256+
-devices (RQ3 / Fig. 6) cost the same per-round Python overhead as 10.
+Rounds are scheduled by the event-driven :class:`repro.fl.engine.RoundEngine`:
+
+* ``engine_mode="sync"`` (default) — classic barrier rounds, bit-for-bit
+  identical to the frozen reference loop kept below
+  (:func:`_run_once_reference`, the parity contract enforced by
+  ``tests/test_engine.py``);
+* ``engine_mode="async"`` — dispatch and completion are separate timeline
+  events over per-device virtual clocks; late updates are aggregated with
+  FedAsync-style staleness decay.  The default for Fig. 6 scalability runs.
 
 Method arms:
     method="drfl"      selector in {marl, greedy, random, static}
@@ -23,19 +28,16 @@ import dataclasses
 import time
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fleet import (FleetState, fleet_charge_jit, fleet_connect,
-                              fleet_cost_matrix_jit, fleet_disconnect,
-                              fleet_total_remaining, make_fleet_state)
+from repro.core.fleet import (fleet_charge_jit, fleet_connect,
+                              fleet_cost_matrix_jit, fleet_total_remaining)
 from repro.core.selection import (GreedySelector, MarlSelector, RandomSelector,
                                   SelectorBase, StaticTierSelector)
-from repro.data.partition import dirichlet_partition
-from repro.data.synthetic import synthetic_image_dataset
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
+from repro.fl.engine import RoundEngine, build_world, sync_task_budget
 from repro.models import cnn
 
 
@@ -66,6 +68,12 @@ class FLConfig:
     hotplug_n: int = 0                  # this round with fresh batteries
     energy_scale: float = 1.0           # scales battery to stress budgets
     server_lr: float = 0.7              # damps layer-aligned update drift
+    # --- event-driven round engine (repro.fl.engine) -----------------------
+    engine_mode: str = "sync"           # sync | async
+    staleness_decay: float = 0.5        # FedAsync (1+s)^-decay down-weighting
+    async_eval_every: int = 1           # evaluate every N async aggregations
+    async_time_horizon: float = 0.0     # sim-seconds budget (0 = task budget)
+    async_task_budget: int = 0          # client tasks (0 = sync-equivalent)
 
 
 def _make_selector(cfg: FLConfig, n_models: int) -> SelectorBase:
@@ -80,6 +88,22 @@ def _make_selector(cfg: FLConfig, n_models: int) -> SelectorBase:
     }[cfg.selector]()
 
 
+def _make_buffer(cfg: FLConfig):
+    from repro.core.marl.buffer import ReplayBuffer
+    from repro.core.selection import OBS_DIM
+    n_agents = cfg.n_devices + cfg.hotplug_n
+    if cfg.engine_mode == "async":
+        # one episode step per selector.select call: at most one per task
+        # plus one failed-dispatch probe per completion/boundary event —
+        # sized from the budget the engine will ACTUALLY dispatch
+        budget = int(cfg.async_task_budget or sync_task_budget(cfg))
+        episode_len = 2 * budget + cfg.n_rounds + 8
+    else:
+        episode_len = cfg.n_rounds
+    return ReplayBuffer(64, episode_len, n_agents, OBS_DIM,
+                        n_agents * OBS_DIM, cfg.seed)
+
+
 def run_simulation(cfg: FLConfig, verbose: bool = False) -> Dict:
     """Runs the FL simulation.  With ``marl_episodes > 1`` and the MARL
     selector, earlier episodes pre-train the QMIX policy (fresh fleet +
@@ -91,49 +115,40 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> Dict:
     episodes = cfg.marl_episodes if (cfg.method == "drfl"
                                      and cfg.selector == "marl") else 1
     for ep in range(episodes):
-        hist, selector, buffer = _run_once(
-            cfg, verbose and ep == episodes - 1, selector, buffer,
-            seed_offset=ep)
+        if selector is None:
+            selector = _make_selector(cfg, cnn.num_submodels())
+        marl = selector if isinstance(selector, MarlSelector) else None
+        if marl:
+            if buffer is None:
+                buffer = _make_buffer(cfg)
+            marl.reset_episode()
+        engine = RoundEngine(cfg, selector, buffer,
+                             verbose=verbose and ep == episodes - 1)
+        hist = engine.run()
     return hist
 
 
-def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
-              seed_offset: int = 0):
-    key = jax.random.PRNGKey(cfg.seed)
+# ---------------------------------------------------------------------------
+# frozen synchronous reference loop
+# ---------------------------------------------------------------------------
+#
+# This is the pre-engine round loop, kept VERBATIM (modulo the shared
+# build_world setup and the collision-free client seeds) as the parity
+# contract for RoundEngine's sync mode — the same role the scalar
+# DeviceState path in repro.core.energy plays for the vectorized FleetState
+# kernels.  tests/test_engine.py asserts engine sync histories match this
+# bit-for-bit; do not "improve" it.
 
-    # --- data: synthetic CIFAR-like, Dirichlet non-IID split ---------------
-    x, y = synthetic_image_dataset(cfg.n_train, cfg.num_classes, hw=cfg.hw,
-                                   noise=cfg.noise, seed=cfg.seed)
-    n_val = max(64, int(cfg.n_val_fraction * cfg.n_train))
-    x_val, y_val = x[:n_val], y[:n_val]          # server-side validation set
-    x_tr, y_tr = x[n_val:], y[n_val:]
-    parts = dirichlet_partition(y_tr, cfg.n_devices + cfg.hotplug_n,
-                                cfg.alpha, cfg.seed)
 
-    # --- fleet (vectorized SoA engine) + global model ----------------------
-    n_total = cfg.n_devices + cfg.hotplug_n
-    fleet = make_fleet_state(n_total, cfg.seed,
-                             data_sizes=[len(p) for p in parts],
-                             backend="jax")
-    fleet = fleet.replace(remaining=fleet.battery * cfg.energy_scale)
-    if cfg.hotplug_n:                   # hot-plug devices: not yet connected
-        fleet = fleet_disconnect(fleet, cfg.n_devices)
-    global_params = cnn.init(key, cfg.num_classes, width_mult=cfg.width_mult)
-    M = cnn.num_submodels()
-    # Energy/time accounting (Eq. 5 & 7) is calibrated to the PAPER-scale
-    # backbone (full-width ResNet-18 on 32x32): the slim CNN is only the
-    # CPU-budget compute proxy; batteries must see paper-scale costs for the
-    # wooden-barrel dynamics to reproduce.
-    ref_params = jax.eval_shape(
-        lambda k: cnn.init(k, cfg.num_classes, width_mult=1.0),
-        jax.random.PRNGKey(0))
-    sizes = tuple(
-        sum(x.size * x.dtype.itemsize
-            for x in jax.tree.leaves(cnn.submodel_param_tree(ref_params, m)))
-        for m in range(M))
-    full_flops = cnn.flops_per_sample(M - 1, 32, 1.0)
-    fractions = tuple(cnn.flops_per_sample(m, 32, 1.0) / full_flops
-                      for m in range(M))
+def _run_once_reference(cfg: FLConfig, verbose=False, selector=None,
+                        buffer=None):
+    w = build_world(cfg)
+    fleet = w.fleet
+    global_params = w.global_params
+    M = w.n_models
+    x_tr, y_tr, x_val, y_val, parts = w.x_tr, w.y_tr, w.x_val, w.y_val, w.parts
+    sizes, fractions = w.sizes, w.fractions
+    n_total = w.n_total
     if selector is None:
         selector = _make_selector(cfg, M)
     hist_hotplug_done = False
@@ -159,23 +174,14 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
         t0 = time.time()
         if (cfg.hotplug_n and not hist_hotplug_done
                 and t >= cfg.hotplug_round):
-            # paper Step 1 hot-plug: new devices connect, receive the global
-            # model (implicit — clients always pull W_t), start with full
-            # batteries
             fleet = fleet_connect(fleet, cfg.n_devices, cfg.energy_scale)
             hist_hotplug_done = True
-        # Top-K budget tracks the CONNECTED fleet: once hot-plug devices
-        # join, the participation fraction applies to all of them (computing
-        # k from cfg.n_devices alone would silently shrink the effective
-        # fraction after the join round).
         n_connected = cfg.n_devices + (cfg.hotplug_n if hist_hotplug_done
                                        else 0)
         k = max(1, int(round(cfg.participation * n_connected)))
         sel = selector.select(fleet, t, k, sizes, fractions,
                               cfg.local_epochs, cfg.batch_size)
 
-        # --- vectorized energy accounting: price every (device, model) pair
-        # in one jitted kernel, charge the whole fleet in one shot ----------
         choice = np.asarray(sel.model_choice, np.int64)
         active = choice >= 0
         m_idx = np.clip(choice, 0, M - 1)
@@ -190,7 +196,6 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
         survivors = active & ok
         t_round = float(t_cost[survivors].max()) if survivors.any() else 0.0
 
-        # --- local training on the surviving participants ------------------
         deltas, idxs, weights = [], [], []
         for i in sel.participants:
             if not survivors[i]:
@@ -199,11 +204,8 @@ def _run_once(cfg: FLConfig, verbose, selector=None, buffer=None,
             xi = x_tr[parts[i]]
             yi = y_tr[parts[i]]
             if len(xi) == 0:
-                # large-fleet Dirichlet splits can leave a device with no
-                # local data: it still paid the round's (mostly comm)
-                # energy but has nothing to contribute
                 continue
-            upd_seed = cfg.seed * 1000 + t * 100 + i
+            upd_seed = fl_client.client_update_seed(cfg.seed, t, i)
             if cfg.method == "drfl":
                 d_, _ = fl_client.drfl_client_update(
                     global_params, m, xi, yi, epochs=cfg.local_epochs,

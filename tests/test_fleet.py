@@ -18,8 +18,8 @@ from repro.core.fleet import (FleetState, as_fleet_state, fleet_affordability,
                               fleet_charge, fleet_charge_jit,
                               fleet_connect, fleet_cost_matrix,
                               fleet_cost_matrix_jit, fleet_disconnect,
-                              fleet_round_cost, fleet_total_remaining,
-                              make_fleet_state)
+                              fleet_idle, fleet_round_cost, fleet_set_busy,
+                              fleet_total_remaining, make_fleet_state)
 from repro.core.selection import (GreedySelector, MarlSelector,
                                   StaticTierSelector, fleet_obs, obs_vector)
 
@@ -150,6 +150,34 @@ def test_jax_backend_matches_numpy_reference():
                                   np.asarray(ref_fleet.alive))
     np.testing.assert_allclose(np.asarray(jx_fleet.remaining),
                                np.asarray(ref_fleet.remaining), rtol=1e-5)
+
+
+def test_busy_until_virtual_clocks():
+    """Per-device virtual clocks for the async engine: fresh fleets are
+    idle, fleet_set_busy marks tasks in flight, hot-plug joins idle at the
+    join time."""
+    fleet = make_fleet_state(6, seed=0, backend="numpy")
+    np.testing.assert_array_equal(np.asarray(fleet.busy_until), np.zeros(6))
+    assert fleet_idle(fleet, 0.0).all()
+    busy = fleet_set_busy(fleet, [1, 4], [10.0, 3.5])
+    # functional: the input fleet is untouched
+    assert float(fleet.busy_until[1]) == 0.0
+    np.testing.assert_array_equal(fleet_idle(busy, 5.0),
+                                  [True, False, True, True, True, True])
+    assert fleet_idle(busy, 10.0).all()
+    # dead devices are never idle/dispatchable
+    dead = busy.replace(alive=np.array([False] + [True] * 5))
+    assert not fleet_idle(dead, 20.0)[0]
+    # hot-plug: joiners come back idle as of the join event's sim time
+    off = fleet_disconnect(fleet_set_busy(fleet, [4, 5], [99.0, 99.0]), 4)
+    on = fleet_connect(off, 4, energy_scale=1.0, now=7.0)
+    np.testing.assert_array_equal(np.asarray(on.busy_until)[4:], [7.0, 7.0])
+    assert not fleet_idle(on, 6.0)[4]
+    assert fleet_idle(on, 7.0)[4]
+    # jax backend: busy_until flows through the pytree/jit kernels
+    fj = make_fleet_state(6, seed=0, backend="jax")
+    fj2, _ = fleet_charge_jit(fj, np.zeros(6, np.float32), np.ones(6, bool))
+    assert np.shape(np.asarray(fj2.busy_until)) == (6,)
 
 
 def test_connect_disconnect():

@@ -7,7 +7,9 @@ from repro.fl import FLConfig, run_simulation
 
 @pytest.fixture(scope="module")
 def drfl_history():
-    cfg = FLConfig(n_devices=8, n_rounds=8, participation=0.4, n_train=900,
+    # 10 rounds: enough for the best exit to clear 0.3 under the
+    # collision-free client seeds (ISSUE 2) at this tiny budget
+    cfg = FLConfig(n_devices=8, n_rounds=10, participation=0.4, n_train=900,
                    local_epochs=2, method="drfl", selector="greedy", seed=3,
                    noise=0.8)
     return run_simulation(cfg)
