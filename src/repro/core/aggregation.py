@@ -5,15 +5,19 @@ aggregated".  A layer of the global model is updated with the data-size-
 weighted mean of exactly those client gradients whose submodel contains the
 layer; layers no client trained keep the previous global value.
 
-Two deployment forms:
+Three deployment forms:
 * :func:`layerwise_aggregate` — host/driver-side over a list of client
-  updates (the FL simulation and the paper repro use this).
+  updates (the original simulation path, kept as the parity reference).
+* the STACKED form — client updates flattened into equal-width segment rows
+  ``[N, R, seg]`` with a per-row mask matrix ``[N, R]``
+  (:class:`StackTemplate` + :func:`stacked_masked_mean`), dispatched to the
+  Pallas ``layer_agg`` kernel as ONE fused pass (interpret mode on CPU).
 * :func:`fl_allreduce` — the same op expressed as a masked ``psum`` over the
   ``pod`` mesh axis (multi-pod production mapping; each pod is a client).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +68,165 @@ def layerwise_aggregate(global_params, client_updates: List, client_masks: List,
         return (gp.astype(jnp.float32) + server_lr * avg).astype(gp.dtype)
 
     return jax.tree.map(agg, global_params, *client_updates, *client_masks)
+
+
+# ---------------------------------------------------------------------------
+# stacked [N, R, seg] representation (feeds the Pallas layer_agg kernel)
+# ---------------------------------------------------------------------------
+#
+# The kernel wants a uniform [N, L, D]; the CNN's layer groups span ~3 orders
+# of magnitude in size, so a naive stack to [N, n_groups, max_group] wastes
+# ~7x memory on padding.  Instead each group is padded to a multiple of a
+# fixed segment width ``seg`` and laid out as consecutive ROWS of one
+# [N, R, seg] array: the mask value is constant within a group, so every row
+# of a group carries its group's mask entry and the kernel's per-layer
+# masked mean is exact.  Padding waste is < n_groups * seg elements total.
+
+
+class StackTemplate(NamedTuple):
+    """Row layout of one model's parameters, grouped by aggregation unit."""
+    seg: int                               # segment (row) width
+    n_rows: int                            # R: total rows
+    group_sizes: Tuple[int, ...]           # flat element count per group
+    group_rows: Tuple[Tuple[int, int], ...]  # (row_start, row_stop) per group
+
+
+def build_stack_template(group_trees: Sequence, seg: int = 1024
+                         ) -> StackTemplate:
+    sizes, rows, r = [], [], 0
+    for tree in group_trees:
+        n = int(sum(l.size for l in jax.tree.leaves(tree)))
+        nr = max(1, -(-n // seg))
+        sizes.append(n)
+        rows.append((r, r + nr))
+        r += nr
+    return StackTemplate(seg=int(seg), n_rows=r, group_sizes=tuple(sizes),
+                         group_rows=tuple(rows))
+
+
+def _flat_group(tree, lead_axes: int = 0):
+    """Concat a group's leaves into one flat vector (or [P, flat])."""
+    leaves = jax.tree.leaves(tree)
+    if lead_axes:
+        return jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
+            axis=1)
+    return jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def stack_group_rows(group_trees: Sequence, template: StackTemplate,
+                     held, stacked: bool = False):
+    """Flatten held groups into segment rows.
+
+    group_trees: one entry per HELD group, in global group order (entries
+                 for unheld groups are skipped via ``held``);
+    held:        boolean per global group;
+    stacked:     leaves carry a leading participant axis [P, ...].
+
+    Returns [R, seg] (or [P, R, seg]) float32 with zeros outside held groups.
+    """
+    it = iter(group_trees)
+    parts = []
+    lead = None
+    for g, is_held in enumerate(held):
+        r0, r1 = template.group_rows[g]
+        nr, size = r1 - r0, template.group_sizes[g]
+        if not is_held:
+            parts.append(("zeros", nr))
+            continue
+        flat = _flat_group(next(it), lead_axes=1 if stacked else 0)
+        pad = nr * template.seg - size
+        if stacked:
+            lead = flat.shape[0]
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+            parts.append(("rows", flat.reshape(lead, nr, template.seg)))
+        else:
+            flat = jnp.pad(flat, (0, pad))
+            parts.append(("rows", flat.reshape(nr, template.seg)))
+    out = []
+    for kind, v in parts:
+        if kind == "rows":
+            out.append(v)
+        elif stacked:
+            out.append(jnp.zeros((lead, v, template.seg), jnp.float32))
+        else:
+            out.append(jnp.zeros((v, template.seg), jnp.float32))
+    return jnp.concatenate(out, axis=1 if stacked else 0)
+
+
+def group_row_mask(held, template: StackTemplate) -> jnp.ndarray:
+    """Expand a per-group 0/1 vector to the per-row mask [R]."""
+    m = jnp.zeros((template.n_rows,), jnp.float32)
+    for g, is_held in enumerate(held):
+        if is_held:
+            r0, r1 = template.group_rows[g]
+            m = m.at[r0:r1].set(1.0)
+    return m
+
+
+def stacked_masked_mean(U, mask01, weights, alphas=None, *, interpret=None,
+                        use_kernel: Optional[bool] = None):
+    """Masked weighted mean over clients on the stacked representation.
+
+    U: [N, R, seg]; mask01: [N, R] 0/1 hold masks; weights: [N];
+    alphas: optional [N] per-client staleness scales applied to the
+    NUMERATOR only (FedAsync absolute damping) — the denominator keeps the
+    0/1 hold mask, recovered from the kernel's single-mask contract by
+    rescaling each row with (sum w*alpha*m) / (sum w*m).  ``alphas=None``
+    skips the rescale entirely, so the fresh path is bit-for-bit the plain
+    kernel output.  Returns [R, seg] float32.
+
+    Dispatch: the Pallas ``layer_agg`` kernel on TPU (one fused VMEM pass
+    per block), and the identical-math fused XLA einsum elsewhere —
+    interpret-mode Pallas walks the R-row grid in a simulated loop, which
+    is a testing tool, not a CPU execution path.  ``use_kernel=True``
+    forces the kernel (tests pair it with ``interpret=True``).
+    """
+    from repro.kernels.layer_agg import layer_agg_op
+
+    w = jnp.asarray(weights, jnp.float32)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    op = (lambda u, m, ww: layer_agg_op(u, m, ww, interpret=interpret)) \
+        if use_kernel else _stacked_mean_ref
+    if alphas is None:
+        return op(U, mask01, w)
+    a = jnp.asarray(alphas, jnp.float32)
+    m_alpha = mask01 * a[:, None]
+    out = op(U, m_alpha, w)
+    den01 = (w[:, None] * mask01).sum(axis=0)
+    den_a = (w[:, None] * m_alpha).sum(axis=0)
+    ratio = jnp.where(den01 > 0, den_a / jnp.maximum(den01, 1e-12), 0.0)
+    return out * ratio[:, None]
+
+
+@jax.jit
+def _stacked_mean_ref(U, mask, w):
+    from repro.kernels.layer_agg import layer_agg_ref
+    return layer_agg_ref(U, mask, w)
+
+
+def unstack_apply(global_group_trees: Sequence, rows, template: StackTemplate,
+                  server_lr: float = 1.0):
+    """Apply averaged delta rows [R, seg] back onto the global group trees.
+
+    Returns the list of updated group trees (same structures/dtypes);
+    mirrors :func:`layerwise_aggregate`'s ``gp + server_lr * avg`` leaf op.
+    """
+    out = []
+    for g, tree in enumerate(global_group_trees):
+        r0, r1 = template.group_rows[g]
+        flat = rows[r0:r1].reshape(-1)[:template.group_sizes[g]]
+        leaves, treedef = jax.tree.flatten(tree)
+        new_leaves, off = [], 0
+        for l in leaves:
+            d = flat[off:off + l.size].reshape(l.shape)
+            new_leaves.append(
+                (l.astype(jnp.float32) + server_lr * d).astype(l.dtype))
+            off += l.size
+        out.append(jax.tree.unflatten(treedef, new_leaves))
+    return out
 
 
 def fl_allreduce(update, mask, weight, axis_name: str = "pod"):

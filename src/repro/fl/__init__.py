@@ -1,4 +1,5 @@
 from repro.fl.simulation import FLConfig, run_simulation  # noqa: F401
-from repro.fl.engine import RoundEngine, build_world, sync_task_budget  # noqa: F401
+from repro.fl.engine import (RoundEngine, build_world,  # noqa: F401
+                             resolve_client_executor, sync_task_budget)
 from repro.fl.environment import FLEnv, FLEnvConfig  # noqa: F401
 from repro.core.fleet import FleetState, make_fleet_state  # noqa: F401

@@ -11,6 +11,12 @@ kinds mirror the three methods under comparison:
 
 Each kind jits one program per submodel index — shapes are static per index,
 so 4 programs cover the whole fleet.
+
+This is the PER-CLIENT path (one dispatch per mini-batch): small fleets use
+it directly, and it is the parity reference for the bucketed-vmap executor
+(:mod:`repro.fl.batch`) that large fleets run — both train the same
+per-method losses exported below.  Per-step losses accumulate on device and
+sync to the host ONCE per client (:func:`_mean_loss`).
 """
 from __future__ import annotations
 
@@ -44,21 +50,48 @@ def _ce(logits, y):
     return jnp.mean(lse - tgt)
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _drfl_sgd_step(params, x, y, model_idx: int, lr: float = 0.05):
+# ---------------------------------------------------------------------------
+# per-method local losses, shared verbatim by the per-client steps below and
+# the bucketed-vmap executor (repro.fl.batch) so both paths train the same
+# objective on the same submodel tree
+# ---------------------------------------------------------------------------
+
+
+def drfl_submodel_loss(sub, x, y):
     """Joint CE over every exit the submodel holds (BranchyNet-style deep
     supervision — each of the paper's layer-wise models carries a bottleneck
     + classifier per block, so shallow exits keep learning on deep clients
-    and layer-aligned aggregation stays useful for Model_1..Model_m)."""
+    and layer-aligned aggregation stays useful for Model_1..Model_m).
+    The deepest held exit carries full weight; shallower exits get 0.3."""
+    outs = cnn.apply_all_exits(sub, x)
+    loss = _ce(outs[-1], y)
+    for o in outs[:-1]:
+        loss = loss + 0.3 * _ce(o, y)
+    return loss / (1.0 + 0.3 * (len(outs) - 1))
+
+
+def slice_submodel_loss(sub, x, y):
+    """Width-sliced trees (HeteroFL): loss at the tree's deepest exit."""
+    outs = cnn.apply_all_exits(sub, x)
+    return _ce(outs[-1], y)
+
+
+def scalefl_submodel_loss(sub, x, y):
+    """Depth+width tree; CE at every held exit + KD deepest->shallower."""
+    outs = cnn.apply_all_exits(sub, x)
+    teacher = outs[-1]
+    loss = _ce(teacher, y)
+    for s in outs[:-1]:
+        loss = loss + 0.5 * (_ce(s, y) + kd_loss(s, jax.lax.stop_gradient(teacher)))
+    return loss / max(len(outs), 1)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _drfl_sgd_step(params, x, y, model_idx: int, lr: float = 0.05):
     def loss_fn(p):
         sub = {"stem": p["stem"], "stages": p["stages"][:model_idx + 1],
                "exits": p["exits"][:model_idx + 1]}
-        outs = cnn.apply_all_exits(sub, x)
-        # deepest held exit carries full weight; shallower exits get 0.3
-        loss = _ce(outs[-1], y)
-        for o in outs[:-1]:
-            loss = loss + 0.3 * _ce(o, y)
-        return loss / (1.0 + 0.3 * (len(outs) - 1))
+        return drfl_submodel_loss(sub, x, y)
 
     loss, grads = jax.value_and_grad(loss_fn)(params)
     new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
@@ -67,30 +100,25 @@ def _drfl_sgd_step(params, x, y, model_idx: int, lr: float = 0.05):
 
 @jax.jit
 def _slice_sgd_step(params, x, y, lr: float = 0.05):
-    """For width-sliced trees (HeteroFL): loss at the tree's deepest exit."""
-    def loss_fn(p):
-        outs = cnn.apply_all_exits(p, x)
-        return _ce(outs[-1], y)
-
-    loss, grads = jax.value_and_grad(loss_fn)(params)
+    loss, grads = jax.value_and_grad(slice_submodel_loss)(params, x, y)
     new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
     return new, loss
 
 
 @jax.jit
 def _scalefl_sgd_step(params, x, y, lr: float = 0.05):
-    """Depth+width tree; CE at every held exit + KD deepest->shallower."""
-    def loss_fn(p):
-        outs = cnn.apply_all_exits(p, x)
-        teacher = outs[-1]
-        loss = _ce(teacher, y)
-        for s in outs[:-1]:
-            loss = loss + 0.5 * (_ce(s, y) + kd_loss(s, jax.lax.stop_gradient(teacher)))
-        return loss / max(len(outs), 1)
-
-    loss, grads = jax.value_and_grad(loss_fn)(params)
+    loss, grads = jax.value_and_grad(scalefl_submodel_loss)(params, x, y)
     new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
     return new, loss
+
+
+def _mean_loss(losses) -> float:
+    """ONE host sync for the whole local run: the per-step device scalars
+    stay un-synced (jax dispatch keeps streaming) and are reduced on device;
+    only the final mean crosses to the host."""
+    if not losses:
+        return 0.0
+    return float(jnp.mean(jnp.stack(losses)))
 
 
 def _run_epochs(step_fn, params, x, y, epochs, batch, rng, lr):
@@ -98,8 +126,8 @@ def _run_epochs(step_fn, params, x, y, epochs, batch, rng, lr):
     for _ in range(epochs):
         for xb, yb in epoch_batches(x, y, batch, rng):
             params, l = step_fn(params, jnp.asarray(xb), jnp.asarray(yb), lr)
-            losses.append(float(l))
-    return params, float(np.mean(losses)) if losses else 0.0
+            losses.append(l)
+    return params, _mean_loss(losses)
 
 
 def drfl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
@@ -112,9 +140,9 @@ def drfl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
         for xb, yb in epoch_batches(x, y, batch, rng):
             params, l = _drfl_sgd_step(params, jnp.asarray(xb), jnp.asarray(yb),
                                        model_idx, lr)
-            losses.append(float(l))
+            losses.append(l)
     delta = jax.tree.map(lambda a, b: a - b, params, global_params)
-    return delta, float(np.mean(losses)) if losses else 0.0
+    return delta, _mean_loss(losses)
 
 
 def heterofl_client_update(global_params, model_idx: int, x, y, *, epochs=5,

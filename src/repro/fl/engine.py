@@ -54,6 +54,7 @@ from repro.core.fleet import (FleetState, fleet_charge_jit, fleet_connect,
 from repro.core.selection import MarlSelector
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import synthetic_image_dataset
+from repro.fl import batch as fl_batch
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
 from repro.models import cnn
@@ -131,6 +132,52 @@ def _client_update(cfg, global_params, m, xi, yi, seed):
               batch=cfg.batch_size, lr=cfg.lr, seed=seed)
 
 
+# Above this per-step work, XLA CPU executes the per-client convs at
+# BLAS-bound speed and batching them (vmapped GEMMs) cannot win — measured
+# crossover between 1.8e7 (batched 2x faster) and 5.6e8 (batched 0.7x)
+# FLOPs per training step on 2-core CPU; see benchmarks/client_bench.py.
+_CPU_BATCHED_STEP_FLOPS = 5e7
+
+
+def resolve_client_executor(cfg) -> str:
+    """``cfg.client_executor``: "perclient" | "batched" | "auto".
+
+    "auto" picks the bucketed-vmap executor (repro.fl.batch, <= 1 jit
+    dispatch per submodel bucket per round) at 64+ device fleets — where
+    per-participant dispatch dominates wall time — and the per-client path
+    below that, which keeps small-fleet sync runs bit-for-bit equal to the
+    frozen reference loop (vmap/scan fusion reorders float reductions at
+    the ULP level, so the batched path is allclose, not bit-exact).  On
+    CPU, large per-step models stay per-client: execution there is
+    FLOP-bound, so bucketing only wins while per-op overhead dominates
+    (small widths/images — exactly the CPU-budget large-fleet configs)."""
+    mode = getattr(cfg, "client_executor", "auto")
+    if mode == "auto":
+        if cfg.n_devices < 64:
+            return "perclient"
+        if jax.default_backend() == "cpu":
+            step_flops = (cnn.flops_per_sample(cnn.num_submodels() - 1,
+                                               cfg.hw, cfg.width_mult)
+                          * cfg.batch_size)
+            return ("batched" if step_flops <= _CPU_BATCHED_STEP_FLOPS
+                    else "perclient")
+        return "batched"
+    if mode in ("perclient", "batched"):
+        return mode
+    raise ValueError(f"unknown client_executor {mode!r} "
+                     "(expected 'auto', 'perclient' or 'batched')")
+
+
+def _run_batched_cohort(cfg, world, global_params, device_ids, model_idxs,
+                        seeds, x_dev, y_dev) -> fl_batch.CohortResult:
+    """One bucketed-vmap executor pass for ``device_ids`` (all must have
+    local data).  Weights default to shard sizes inside run_cohort."""
+    return fl_batch.run_cohort(
+        cfg.method, global_params, x_dev, y_dev,
+        [world.parts[i] for i in device_ids], device_ids, model_idxs, seeds,
+        epochs=cfg.local_epochs, batch=cfg.batch_size, lr=cfg.lr)
+
+
 def sync_task_budget(cfg) -> int:
     """Total client-task budget a sync run of ``cfg`` dispatches at most
     (sum over rounds of the connected-fleet Top-K k) — the async engine's
@@ -158,6 +205,7 @@ class RoundEngine:
         self.buffer = buffer
         self.verbose = verbose
         self.mode = getattr(cfg, "engine_mode", "sync")
+        self.executor = resolve_client_executor(cfg)
 
     def run(self) -> Dict:
         self.world = build_world(self.cfg)
@@ -179,6 +227,12 @@ class RoundEngine:
         M = w.n_models
         selector, buffer = self.selector, self.buffer
         marl = selector if isinstance(selector, MarlSelector) else None
+
+        x_dev = y_dev = None
+        if self.executor == "batched":
+            # training set stays device-resident: the bucketed executor
+            # gathers mini-batches on device instead of per-step host copies
+            x_dev, y_dev = jnp.asarray(w.x_tr), jnp.asarray(w.y_tr)
 
         hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
                 "alive": [], "participants": [], "model_choices": [],
@@ -225,26 +279,43 @@ class RoundEngine:
             # straggler wait: finished participants idle at the barrier
             idle_round = float((t_round - t_cost[survivors]).sum())
 
-            deltas, idxs, weights = [], [], []
-            for i in sel.participants:
-                if not survivors[i]:
-                    continue                 # wasted energy, no contribution
-                m = int(choice[i])
-                xi = w.x_tr[w.parts[i]]
-                yi = w.y_tr[w.parts[i]]
-                if len(xi) == 0:
-                    # large-fleet Dirichlet splits can leave a device with
-                    # no local data: it still paid the round's (mostly comm)
-                    # energy but has nothing to contribute
-                    continue
-                upd_seed = fl_client.client_update_seed(cfg.seed, t, i)
-                d_, _ = _client_update(cfg, global_params, m, xi, yi,
-                                       upd_seed)
-                deltas.append(d_)
-                idxs.append(m)
-                weights.append(float(len(xi)))
-
-            if deltas:
+            # contributors: survivors with local data (large-fleet Dirichlet
+            # splits can leave a device with no samples — it still paid the
+            # round's mostly-comm energy but has nothing to contribute)
+            cohort = [i for i in sel.participants
+                      if survivors[i] and len(w.parts[i])]
+            if self.executor == "batched" and cohort:
+                # whole cohort in <= n_buckets jit dispatches (one per
+                # populated submodel index), stacked deltas straight into
+                # the Pallas layer-agg aggregation for DR-FL
+                res = _run_batched_cohort(
+                    cfg, w, global_params, cohort,
+                    [int(choice[i]) for i in cohort],
+                    [fl_client.client_update_seed(cfg.seed, t, i)
+                     for i in cohort], x_dev, y_dev)
+                if cfg.method == "drfl":
+                    global_params = fl_server.aggregate_drfl_stacked(
+                        global_params,
+                        [(b.model_idx, b.stacked_delta, b.weights, None)
+                         for b in res.buckets], server_lr=cfg.server_lr)
+                else:
+                    contribs = res.unstacked()
+                    global_params = fl_server.aggregate_sliced(
+                        global_params, [c[2] for c in contribs],
+                        [c[3] for c in contribs])
+                n_agg += 1
+            elif cohort:
+                deltas, idxs, weights = [], [], []
+                for i in cohort:
+                    m = int(choice[i])
+                    xi = w.x_tr[w.parts[i]]
+                    yi = w.y_tr[w.parts[i]]
+                    upd_seed = fl_client.client_update_seed(cfg.seed, t, i)
+                    d_, _ = _client_update(cfg, global_params, m, xi, yi,
+                                           upd_seed)
+                    deltas.append(d_)
+                    idxs.append(m)
+                    weights.append(float(len(xi)))
                 if cfg.method == "drfl":
                     global_params = fl_server.aggregate_drfl(
                         global_params, deltas, idxs, weights,
@@ -316,6 +387,10 @@ class RoundEngine:
                      or sync_task_budget(cfg))
         w1, w2, w3 = cfg.reward_weights
         rows = np.arange(w.n_total)
+
+        x_dev = y_dev = None
+        if self.executor == "batched":
+            x_dev, y_dev = jnp.asarray(w.x_tr), jnp.asarray(w.y_tr)
 
         hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
                 "alive": [], "participants": [], "model_choices": [],
@@ -430,15 +505,41 @@ class RoundEngine:
             busy64[np.asarray(started)] = now + t_cost[np.asarray(started)]
             fleet = fleet_set_busy(fleet, started,
                                    now + t_cost[np.asarray(started)])
+            # micro-bucket: tasks sharing this dispatch tick train against
+            # the SAME pulled snapshot, so the bucketed executor runs them
+            # as <= n_buckets jit programs NOW and the completion events
+            # just consume the precomputed deltas (semantically identical —
+            # a client's delta depends only on dispatch-time state).  Each
+            # task stores its (shared) BucketResult + row, not a sliced
+            # per-client tree — one slice happens at aggregation time.
+            rows_by_dev: Dict[int, Any] = {}
+            if self.executor == "batched":
+                with_data = [i for i in started if len(w.parts[i])]
+                if with_data:
+                    res = _run_batched_cohort(
+                        cfg, w, global_params, with_data,
+                        [int(choice[i]) for i in with_data],
+                        [fl_client.client_update_seed(cfg.seed, cid, i)
+                         for i in with_data], x_dev, y_dev)
+                    for b in res.buckets:
+                        for r, dev in enumerate(b.participants):
+                            rows_by_dev[dev] = (b, r)
             for i in started:
                 if i in last_done:            # wait-for-work since last task
                     hist["wait_for_work"] += now - last_done[i]
-                heapq.heappush(heap, (now + float(t_cost[i]), state["seq"], {
+                task = {
                     "device": i, "m": int(choice[i]),
-                    "version": state["version"], "params": global_params,
+                    "version": state["version"],
                     "cohort": cid, "dispatch": cid, "t0": now,
                     "t_cost": float(t_cost[i]),
-                }))
+                }
+                if self.executor == "batched":
+                    task["delta_row"] = rows_by_dev.get(i)
+                else:
+                    # per-client path trains lazily at the completion event
+                    task["params"] = global_params
+                heapq.heappush(heap, (now + float(t_cost[i]), state["seq"],
+                                      task))
                 state["seq"] += 1
             cohorts[cid]["pending"] = len(started)
             state["tasks_started"] += len(started)
@@ -509,28 +610,47 @@ class RoundEngine:
             agg_wait = now - (task["t0"] + task["t_cost"])
             hist["idle_time"] += agg_wait
             state["window_idle"] += agg_wait
-            xi = w.x_tr[w.parts[i]]
-            yi = w.y_tr[w.parts[i]]
+            n_i = len(w.parts[i])
             aggregated = False
-            if len(xi):
-                seed = fl_client.client_update_seed(cfg.seed,
-                                                    task["dispatch"], i)
-                # clients train on the model snapshot they PULLED at
-                # dispatch; the server reconciles drift via staleness decay
-                delta, _ = _client_update(cfg, task["params"], task["m"],
-                                          xi, yi, seed)
-                if cfg.method == "drfl":
-                    global_params = fl_server.aggregate_drfl(
-                        global_params, [delta], [task["m"]],
-                        [float(len(xi))], server_lr=cfg.server_lr,
-                        staleness=[staleness], staleness_decay=decay)
+            if n_i:
+                batched = "delta_row" in task
+                if batched:
+                    # bucketed executor: delta precomputed at the dispatch
+                    # tick against the snapshot pulled there; slice this
+                    # client's row out of the shared bucket result now
+                    bucket, row = task["delta_row"]
                 else:
+                    # clients train on the model snapshot they PULLED at
+                    # dispatch; the server reconciles drift via staleness
+                    seed = fl_client.client_update_seed(cfg.seed,
+                                                        task["dispatch"], i)
+                    delta, _ = _client_update(cfg, task["params"], task["m"],
+                                              w.x_tr[w.parts[i]],
+                                              w.y_tr[w.parts[i]], seed)
+                if cfg.method == "drfl":
+                    if batched:
+                        delta_1 = jax.tree.map(
+                            lambda a: a[row:row + 1], bucket.stacked_delta)
+                        global_params = fl_server.aggregate_drfl_stacked(
+                            global_params,
+                            [(task["m"], delta_1, [float(n_i)],
+                              [staleness])],
+                            server_lr=cfg.server_lr, staleness_decay=decay)
+                    else:
+                        global_params = fl_server.aggregate_drfl(
+                            global_params, [delta], [task["m"]],
+                            [float(n_i)], server_lr=cfg.server_lr,
+                            staleness=[staleness], staleness_decay=decay)
+                else:
+                    if batched:
+                        delta = jax.tree.map(lambda a: a[row],
+                                             bucket.stacked_delta)
                     a = fl_server.staleness_scale(staleness, decay)
                     if a != 1.0:
                         delta = jax.tree.map(
                             lambda u: (u * a).astype(u.dtype), delta)
                     global_params = fl_server.aggregate_sliced(
-                        global_params, [delta], [float(len(xi))])
+                        global_params, [delta], [float(n_i)])
                 state["version"] += 1
                 aggregated = True
             hist["staleness"].append(staleness)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aggregation
 from repro.core.aggregation import layerwise_aggregate
 from repro.models import cnn
 
@@ -48,21 +49,37 @@ def evaluate(params, x_val: np.ndarray, y_val: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
+# mask pytrees depend only on the tree STRUCTURE and (model_idx, scale) —
+# not on parameter values — so they are cached and shared across aggregation
+# events (the async engine rebuilds masks once per completion otherwise).
+# Mask leaves are immutable jnp scalars, safe to alias between calls.
+_MASK_CACHE: dict = {}
+
+
 def cnn_update_mask(global_params, model_idx: int, scale: float = 1.0):
     """Scalar masks matching the CNN tree: stem + stages<=m + exits<=m
     (clients deep-supervise every exit their submodel holds).  ``scale``
     replaces the 1.0 of held layers — the staleness path builds decay masks
     (value alpha_s per exit-layer) with the same structure."""
+    key = (jax.tree.structure(global_params), int(model_idx), float(scale))
+    hit = _MASK_CACHE.get(key)
+    if hit is not None:
+        return hit
+
     def const(tree, v):
         return jax.tree.map(lambda _: jnp.asarray(v, jnp.float32), tree)
 
-    return {
+    mask = {
         "stem": const(global_params["stem"], scale),
         "stages": [const(s, scale if i <= model_idx else 0.0)
                    for i, s in enumerate(global_params["stages"])],
         "exits": [const(e, scale if i <= model_idx else 0.0)
                   for i, e in enumerate(global_params["exits"])],
     }
+    if len(_MASK_CACHE) > 512:          # staleness scales are open-ended
+        _MASK_CACHE.clear()
+    _MASK_CACHE[key] = mask
+    return mask
 
 
 def staleness_scale(staleness: float, decay: float = 0.5) -> float:
@@ -105,6 +122,144 @@ def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
         deltas = scaled
     return layerwise_aggregate(global_params, deltas, masks, weights,
                                server_lr=server_lr)
+
+
+# ---------------------------------------------------------------------------
+# stacked DR-FL aggregation: [N, R, seg] rows -> Pallas layer_agg kernel
+# ---------------------------------------------------------------------------
+#
+# The CNN tree's aggregation groups are stem + stages[i] + exits[i] (the
+# units cnn_update_mask masks as wholes).  Each group flattens into
+# consecutive fixed-width segment rows (core.aggregation.StackTemplate);
+# the per-client hold masks and staleness alphas become a [N, R] mask
+# matrix, and the whole of DR-FL Step 2 is ONE fused kernel dispatch
+# (interpret mode on CPU, the MXU kernel on TPU) instead of a tree.map
+# over ~60 leaves per client.  The list-based path above stays as the
+# parity reference.
+
+_TEMPLATE_CACHE: dict = {}
+
+
+def _cnn_groups(params) -> List:
+    return [params["stem"]] + list(params["stages"]) + list(params["exits"])
+
+
+def _held_groups(n_stages: int, model_idx: int) -> List[bool]:
+    held = [i <= model_idx for i in range(n_stages)]
+    return [True] + held + held
+
+
+def cnn_stack_template(global_params, seg: int = 1024):
+    shapes = tuple((tuple(l.shape), str(l.dtype))
+                   for l in jax.tree.leaves(global_params))
+    key = (shapes, int(seg))
+    if key not in _TEMPLATE_CACHE:
+        _TEMPLATE_CACHE[key] = aggregation.build_stack_template(
+            _cnn_groups(global_params), seg=seg)
+    return _TEMPLATE_CACHE[key]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model_idxs", "server_lr", "any_stale", "use_kernel",
+                     "interpret"))
+def _stacked_agg_program(global_params, deltas, weights, alphas, *,
+                         model_idxs, server_lr, any_stale, use_kernel,
+                         interpret):
+    """The whole of DR-FL Step 2 as ONE jit program: flatten bucket-stacked
+    deltas into [N, R, seg] rows, masked-mean them (Pallas kernel on TPU /
+    fused einsum elsewhere), scatter the averaged rows back onto the global
+    tree.  Compiled once per (bucket model indices, padded shapes)."""
+    template = cnn_stack_template(global_params)
+    n_stages = len(global_params["stages"])
+    us, row_masks = [], []
+    for model_idx, delta in zip(model_idxs, deltas):
+        held = _held_groups(n_stages, model_idx)
+        sub_groups = ([delta["stem"]] + list(delta["stages"])
+                      + list(delta["exits"]))
+        u = aggregation.stack_group_rows(sub_groups, template, held,
+                                         stacked=True)        # [P, R, seg]
+        row_mask = aggregation.group_row_mask(held, template)  # [R]
+        us.append(u)
+        row_masks.append(
+            jnp.broadcast_to(row_mask, (u.shape[0], template.n_rows)))
+    u_all = jnp.concatenate(us, axis=0)
+    m_all = jnp.concatenate(row_masks, axis=0)
+    w_all = jnp.concatenate(weights)
+    a_all = jnp.concatenate(alphas) if any_stale else None
+    rows = aggregation.stacked_masked_mean(
+        u_all, m_all, w_all, a_all, interpret=interpret,
+        use_kernel=use_kernel)
+    new_groups = aggregation.unstack_apply(_cnn_groups(global_params), rows,
+                                           template, server_lr=server_lr)
+    return {"stem": new_groups[0],
+            "stages": new_groups[1:1 + n_stages],
+            "exits": new_groups[1 + n_stages:]}
+
+
+def aggregate_drfl_stacked(global_params, buckets, server_lr: float = 1.0,
+                           staleness_decay: float = 0.5,
+                           interpret: Optional[bool] = None,
+                           use_kernel: Optional[bool] = None):
+    """DR-FL layer-aligned aggregation over bucket-stacked deltas.
+
+    ``buckets``: iterable of ``(model_idx, stacked_delta, weights,
+    staleness)`` where ``stacked_delta`` is the submodel pytree with a
+    leading participant axis ``[P, ...]`` (repro.fl.batch.BucketResult —
+    pow2-padded rows carry weight 0.0 and drop out of the weighted mean
+    exactly), ``weights`` has P data sizes, and ``staleness`` is None or P
+    counts.  Staleness alphas are folded into the mask matrix numerator
+    with the denominator kept at the 0/1 hold mask (absolute FedAsync
+    damping, same semantics as :func:`aggregate_drfl`); all-fresh input
+    skips the rescale so it is exactly the plain masked mean."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    model_idxs, deltas, ws, alphas = [], [], [], []
+    any_stale = False
+    for model_idx, delta, weights, stal in buckets:
+        p = len(weights)
+        model_idxs.append(int(model_idx))
+        deltas.append(delta)
+        ws.append(jnp.asarray([float(x) for x in weights], jnp.float32))
+        if stal is None:
+            alphas.append(jnp.ones((p,), jnp.float32))
+        else:
+            scales = [staleness_scale(s, staleness_decay) for s in stal]
+            any_stale = any_stale or any(a != 1.0 for a in scales)
+            alphas.append(jnp.asarray(scales, jnp.float32))
+    if not deltas:
+        return global_params
+    return _stacked_agg_program(
+        global_params, tuple(deltas), tuple(ws), tuple(alphas),
+        model_idxs=tuple(model_idxs), server_lr=float(server_lr),
+        any_stale=any_stale, use_kernel=bool(use_kernel),
+        interpret=interpret)
+
+
+def aggregate_drfl_from_list(global_params, deltas: List,
+                             model_idxs: List[int],
+                             weights: Sequence[float],
+                             server_lr: float = 1.0,
+                             staleness: Optional[Sequence[float]] = None,
+                             staleness_decay: float = 0.5,
+                             interpret: Optional[bool] = None,
+                             use_kernel: Optional[bool] = None):
+    """Stacked-kernel aggregation over FULL-STRUCTURE delta pytrees (the
+    list-based :func:`aggregate_drfl` contract) — each delta becomes a
+    P=1 bucket.  Used for parity testing the kernel path against the
+    list-based reference on identical inputs."""
+    buckets = []
+    for j, (d, m) in enumerate(zip(deltas, model_idxs)):
+        sub = {"stem": d["stem"], "stages": d["stages"][:m + 1],
+               "exits": d["exits"][:m + 1]}
+        stal = None if staleness is None else [staleness[j]]
+        buckets.append((m, jax.tree.map(lambda a: a[None], sub),
+                        [weights[j]], stal))
+    return aggregate_drfl_stacked(global_params, buckets,
+                                  server_lr=server_lr,
+                                  staleness_decay=staleness_decay,
+                                  interpret=interpret,
+                                  use_kernel=use_kernel)
 
 
 # ---------------------------------------------------------------------------

@@ -74,6 +74,11 @@ class FLConfig:
     async_eval_every: int = 1           # evaluate every N async aggregations
     async_time_horizon: float = 0.0     # sim-seconds budget (0 = task budget)
     async_task_budget: int = 0          # client tasks (0 = sync-equivalent)
+    # --- client-update executor (repro.fl.batch) ---------------------------
+    # "auto" buckets participants by submodel index and runs each bucket as
+    # ONE vmap(scan) jit program at 64+ device fleets (<= 4 dispatches per
+    # sync round); "perclient" keeps the bit-for-bit legacy per-client loop
+    client_executor: str = "auto"       # auto | perclient | batched
 
 
 def _make_selector(cfg: FLConfig, n_models: int) -> SelectorBase:

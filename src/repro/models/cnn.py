@@ -13,6 +13,7 @@ training the same exit.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Optional, Sequence
 
@@ -29,7 +30,52 @@ def _conv_init(key, kh, kw, cin, cout):
             * math.sqrt(2.0 / fan_in))
 
 
+# Under vmap with per-client kernels (the bucketed client-update executor),
+# lax.conv lowers to a grouped convolution, which XLA CPU executes on a
+# naive non-Eigen path — up to ~10x slower per FLOP at paper widths.  The
+# patches formulation below turns the same conv into static slices + an
+# einsum; vmapped, that is a batched GEMM, which XLA CPU runs at BLAS
+# speed.  Trace-time flag: only the bucket program flips it (and only on
+# CPU); everything else keeps the cuDNN/Eigen/MXU-friendly lax.conv.
+_CONV_VIA_PATCHES = False
+
+
+@contextlib.contextmanager
+def conv_via_patches():
+    global _CONV_VIA_PATCHES
+    prev = _CONV_VIA_PATCHES
+    _CONV_VIA_PATCHES = True
+    try:
+        yield
+    finally:
+        _CONV_VIA_PATCHES = prev
+
+
+def _conv_patches(x, w, stride=1):
+    """SAME conv as shifted slices + einsum (identical math to lax.conv up
+    to float reduction order)."""
+    B, H, W, _ = x.shape
+    kh, kw, _, _ = w.shape
+    ho = -(-H // stride)
+    wo = -(-W // stride)
+    ph = max((ho - 1) * stride + kh - H, 0)
+    pw = max((wo - 1) * stride + kw - W, 0)
+    xp = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                     (pw // 2, pw - pw // 2), (0, 0)))
+    rows = []
+    for i in range(kh):
+        cols = []
+        for j in range(kw):
+            cols.append(xp[:, i:i + stride * (ho - 1) + 1:stride,
+                           j:j + stride * (wo - 1) + 1:stride, :])
+        rows.append(jnp.stack(cols, axis=-2))
+    patches = jnp.stack(rows, axis=-3)            # [B, ho, wo, kh, kw, C]
+    return jnp.einsum("bhwijc,ijco->bhwo", patches, w)
+
+
 def _conv(x, w, stride=1):
+    if _CONV_VIA_PATCHES:
+        return _conv_patches(x, w, stride)
     return jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
