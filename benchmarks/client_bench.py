@@ -27,8 +27,14 @@ compile counts are reported separately (``batched_compiles_warm``) —
 cohort churn re-compiles only when a bucket's pow2-padded (P, T) signature
 is new.
 
+Both registered model families run the same harness (``--family cnn``
+limits the sweep); BENCH_client.json records per-family medians with a
+``family`` field per row — the CNN rows keep the PR 3 emit names and
+configuration, so its numbers stay regression-comparable.
+
     python -m benchmarks.client_bench                 # n=64/256/1024 sweep
     python -m benchmarks.client_bench --smoke         # n=64, 2 rounds (CI)
+    python -m benchmarks.client_bench --family mlp    # one family only
     python -m benchmarks.client_bench --json OUT.json # record results
 
 The ISSUE 3 acceptance targets >= 5x at n=256 on CPU with <= 4
@@ -55,8 +61,9 @@ from repro.data.synthetic import synthetic_image_dataset
 from repro.fl import batch as fl_batch
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
-from repro.models import cnn
+from repro.models.family import get_family
 
+FAMILIES = ("cnn", "mlp")
 PARTICIPATION = 0.1
 EPOCHS = 2
 BATCH = 8
@@ -66,17 +73,18 @@ WIDTH = 0.06
 SERVER_LR = 0.7
 
 
-def _setup(n: int, seed: int = 0):
+def _setup(n: int, family: str = "cnn", seed: int = 0):
     x, y = synthetic_image_dataset(max(1500, 6 * n), 10, hw=HW, seed=seed)
     parts = dirichlet_partition(y, n, 0.5, seed)
-    params = cnn.init(jax.random.PRNGKey(seed), 10, width_mult=WIDTH)
+    params = get_family(family).init(jax.random.PRNGKey(seed), 10,
+                                     width_mult=WIDTH, hw=HW)
     return x, y, parts, params
 
 
-def _cohort(n: int, parts, rnd: int, seed: int = 0):
+def _cohort(n: int, parts, rnd: int, family: str = "cnn", seed: int = 0):
     """Round ``rnd``'s cohort: k non-empty-shard devices with model index
-    round-robin over the 4 submodels.  Membership (and therefore every
-    padded program shape) is fixed across rounds; the per-round seeds
+    round-robin over the family's submodels.  Membership (and therefore
+    every padded program shape) is fixed across rounds; the per-round seeds
     reshuffle each client's local schedule exactly as the engine does."""
     k = max(1, int(round(PARTICIPATION * n)))
     ids, j = [], 0
@@ -84,47 +92,49 @@ def _cohort(n: int, parts, rnd: int, seed: int = 0):
         if len(parts[j]):
             ids.append(j)
         j += 1
-    ms = [i % cnn.num_submodels() for i in ids]
+    ms = [i % get_family(family).num_submodels() for i in ids]
     seeds = [fl_client.client_update_seed(seed, rnd, i) for i in ids]
     return ids, ms, seeds
 
 
-def round_per_client(params, x, y, parts, ids, ms, seeds):
+def round_per_client(params, x, y, parts, ids, ms, seeds, family="cnn"):
     """Legacy hot path: per-client updates + list-based aggregation."""
     deltas, weights = [], []
     for i, m, s in zip(ids, ms, seeds):
         d, _ = fl_client.drfl_client_update(
             params, m, x[parts[i]], y[parts[i]], epochs=EPOCHS, batch=BATCH,
-            lr=LR, seed=s)
+            lr=LR, seed=s, family=family)
         deltas.append(d)
         weights.append(float(len(parts[i])))
     new = fl_server.aggregate_drfl(params, deltas, ms, weights,
-                                   server_lr=SERVER_LR)
+                                   server_lr=SERVER_LR, family=family)
     jax.block_until_ready(new)
     return new
 
 
-def round_batched(params, x_dev, y_dev, parts, ids, ms, seeds):
-    """Bucketed hot path: <= 4 executor programs + stacked aggregation."""
+def round_batched(params, x_dev, y_dev, parts, ids, ms, seeds, family="cnn"):
+    """Bucketed hot path: <= n_buckets executor programs + stacked
+    aggregation."""
     res = fl_batch.run_cohort(
         "drfl", params, x_dev, y_dev, [parts[i] for i in ids], ids, ms,
-        seeds, epochs=EPOCHS, batch=BATCH, lr=LR)
+        seeds, epochs=EPOCHS, batch=BATCH, lr=LR, family=family)
     new = fl_server.aggregate_drfl_stacked(
         params, [(b.model_idx, b.stacked_delta, b.weights, None)
-                 for b in res.buckets], server_lr=SERVER_LR)
+                 for b in res.buckets], server_lr=SERVER_LR, family=family)
     jax.block_until_ready(new)
     return new
 
 
-def bench_one(n: int, rounds: int, seed: int = 0) -> dict:
-    x, y, parts, params = _setup(n, seed)
+def bench_one(n: int, rounds: int, family: str = "cnn", seed: int = 0
+              ) -> dict:
+    x, y, parts, params = _setup(n, family, seed)
     x_dev, y_dev = jnp.asarray(x), jnp.asarray(y)
 
     # warmup round 0 (compiles both paths) then time rounds 1..R
-    ids, ms, seeds = _cohort(n, parts, 0, seed)
-    round_per_client(params, x, y, parts, ids, ms, seeds)
+    ids, ms, seeds = _cohort(n, parts, 0, family, seed)
+    round_per_client(params, x, y, parts, ids, ms, seeds, family)
     fl_batch.reset_counters()
-    round_batched(params, x_dev, y_dev, parts, ids, ms, seeds)
+    round_batched(params, x_dev, y_dev, parts, ids, ms, seeds, family)
     warm_compiles = fl_batch.COUNTERS["compiles"]
 
     # per-round MEDIAN wall time: interleaved per-path timing on a small
@@ -132,9 +142,9 @@ def bench_one(n: int, rounds: int, seed: int = 0) -> dict:
     # ops) is hit hardest by scheduling jitter
     pc_steps, pc_times, b_times = 0, [], []
     for r in range(1, rounds + 1):
-        ids, ms, seeds = _cohort(n, parts, r, seed)
+        ids, ms, seeds = _cohort(n, parts, r, family, seed)
         t0 = time.time()
-        round_per_client(params, x, y, parts, ids, ms, seeds)
+        round_per_client(params, x, y, parts, ids, ms, seeds, family)
         pc_times.append(time.time() - t0)
         pc_steps += sum(
             len(fl_batch.client_schedule(parts[i], s, EPOCHS, BATCH))
@@ -143,15 +153,16 @@ def bench_one(n: int, rounds: int, seed: int = 0) -> dict:
 
     fl_batch.reset_counters()
     for r in range(1, rounds + 1):
-        ids, ms, seeds = _cohort(n, parts, r, seed)
+        ids, ms, seeds = _cohort(n, parts, r, family, seed)
         t0 = time.time()
-        round_batched(params, x_dev, y_dev, parts, ids, ms, seeds)
+        round_batched(params, x_dev, y_dev, parts, ids, ms, seeds, family)
         b_times.append(time.time() - t0)
     t_b = float(np.median(b_times))
     execs = fl_batch.COUNTERS["executions"] / rounds
     compiles = fl_batch.COUNTERS["compiles"]
 
-    r = {"n": n, "k": len(ids), "rounds": rounds,
+    n_buckets = get_family(family).num_submodels()
+    r = {"n": n, "k": len(ids), "rounds": rounds, "family": family,
          "per_client_s_per_round": t_pc,
          "batched_s_per_round": t_b,
          "speedup": t_pc / max(t_b, 1e-12),
@@ -159,7 +170,10 @@ def bench_one(n: int, rounds: int, seed: int = 0) -> dict:
          "batched_executions_per_round": execs,
          "batched_compiles_steady": compiles,
          "batched_compiles_warm": warm_compiles}
-    emit(f"client_bench/n{n}", t_b * 1e6,
+    assert execs <= n_buckets, (execs, n_buckets)
+    # CNN keeps its PR 3 emit names so recorded numbers stay comparable
+    tag = f"client_bench/n{n}" if family == "cnn"         else f"client_bench/{family}/n{n}"
+    emit(tag, t_b * 1e6,
          f"speedup={r['speedup']:.1f}x over per-client "
          f"({t_pc*1e3:.0f}ms -> {t_b*1e3:.0f}ms/round) "
          f"execs/round={execs:.1f} "
@@ -173,11 +187,15 @@ def main(argv=None) -> dict:
     json_out = None
     if "--json" in argv:
         json_out = argv[argv.index("--json") + 1]
+    families = ([argv[argv.index("--family") + 1]] if "--family" in argv
+                else list(FAMILIES))
     sizes = [64] if smoke else [64, 256, 1024]
     rounds = 2 if smoke else 4
-    results = [bench_one(n, rounds) for n in sizes]
+    results = [bench_one(n, rounds, family=fam)
+               for fam in families for n in sizes]
     out = {"participation": PARTICIPATION, "epochs": EPOCHS, "batch": BATCH,
-           "hw": HW, "width_mult": WIDTH, "results": results}
+           "hw": HW, "width_mult": WIDTH, "families": families,
+           "results": results}
     if json_out:
         with open(json_out, "w") as f:
             json.dump(out, f, indent=2)

@@ -13,16 +13,31 @@ from __future__ import annotations
 
 import os
 import time
+from typing import Optional
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
+# every paper-table harness builds its FLConfig through bench_params(), so
+# REPRO_BENCH_FAMILY=mlp re-runs the whole artifact suite on a different
+# registered model family (repro.models.family)
+MODEL_FAMILY = os.environ.get("REPRO_BENCH_FAMILY", "cnn")
 
-def bench_params():
-    if FAST:
-        return dict(n_devices=10, n_rounds=20, n_train=1200, local_epochs=2,
-                    participation=0.4, energy_scale=0.08)
-    return dict(n_devices=40, n_rounds=120, n_train=6000, local_epochs=5,
-                participation=0.1, energy_scale=0.6)
+
+def bench_params(model_family: Optional[str] = None):
+    p = (dict(n_devices=10, n_rounds=20, n_train=1200, local_epochs=2,
+              participation=0.4, energy_scale=0.08) if FAST
+         else dict(n_devices=40, n_rounds=120, n_train=6000, local_epochs=5,
+                   participation=0.1, energy_scale=0.6))
+    p["model_family"] = model_family or MODEL_FAMILY
+    return p
+
+
+def family_supports(params: dict, method: str) -> bool:
+    """Whether the configured model family can train ``method`` — harnesses
+    skip unsupported baseline arms (e.g. heterofl under
+    REPRO_BENCH_FAMILY=mlp) instead of crashing mid-suite."""
+    from repro.models.family import get_family
+    return get_family(params.get("model_family")).supports(method)
 
 
 def emit(name: str, us_per_call: float, derived: str):

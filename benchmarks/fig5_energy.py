@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_params, emit
+from benchmarks.common import bench_params, emit, family_supports
 from repro.fl import FLConfig, run_simulation
 
 
@@ -19,6 +19,10 @@ def main(seed=0, verbose=False):
     p["n_rounds"] = max(p["n_rounds"], 10)
     out = {}
     for method, sel in (("drfl", "marl"), ("heterofl", "greedy")):
+        if not family_supports(p, method):
+            emit(f"fig5/{method}", 0.0,
+                 f"skipped=unsupported_by_{p['model_family']}")
+            continue
         t0 = time.time()
         cfg = FLConfig(method=method, selector=sel, seed=seed,
                        marl_episodes=3, **p)   # binding battery budget
@@ -32,10 +36,11 @@ def main(seed=0, verbose=False):
         emit(f"fig5/{method}", (time.time() - t0) * 1e6,
              f"rounds_before_first_death={surv};final_energy_J={e[-1]:.0f};"
              f"final_cum_time_s={t[-1]:.1f};alive_end={alive[-1]}")
-    emit("fig5/claim", 0.0,
-         f"drfl_survives_rounds={out['drfl']['surv']}"
-         f";heterofl_survives_rounds={out['heterofl']['surv']}"
-         f";claim_holds={out['drfl']['surv'] >= out['heterofl']['surv']}")
+    if "drfl" in out and "heterofl" in out:
+        emit("fig5/claim", 0.0,
+             f"drfl_survives_rounds={out['drfl']['surv']}"
+             f";heterofl_survives_rounds={out['heterofl']['surv']}"
+             f";claim_holds={out['drfl']['surv'] >= out['heterofl']['surv']}")
     return out
 
 

@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import FAST, bench_params, emit
+from benchmarks.common import FAST, bench_params, emit, family_supports
 from repro.fl import FLConfig, run_simulation
 
 SIZES = (8, 14) if FAST else (10, 20, 40)
@@ -45,6 +45,10 @@ def main(seed=0, verbose=False, sizes=None):
     results = {}
     for n in sizes:
         for method, sel in (("drfl", "marl"), ("heterofl", "greedy")):
+            if not family_supports(p, method):
+                emit(f"fig6/{method}/n{n}", 0.0,
+                     f"skipped=unsupported_by_{p['model_family']}")
+                continue
             t0 = time.time()
             # at large fleets keep the paper's 10% participation so k (and
             # the per-round training cost) stays proportionate
@@ -72,8 +76,10 @@ def main(seed=0, verbose=False, sizes=None):
             emit(f"fig6/{method}/n{n}", (time.time() - t0) * 1e6,
                  f"best_acc_mean={acc:.3f}")
     for n in sizes:
-        emit(f"fig6/gap/n{n}", 0.0,
-             f"drfl_minus_heterofl={results[(n, 'drfl')] - results[(n, 'heterofl')]:.3f}")
+        if (n, "drfl") in results and (n, "heterofl") in results:
+            emit(f"fig6/gap/n{n}", 0.0,
+                 f"drfl_minus_heterofl="
+                 f"{results[(n, 'drfl')] - results[(n, 'heterofl')]:.3f}")
     return results
 
 

@@ -9,7 +9,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_params, emit
+from benchmarks.common import bench_params, emit, family_supports
 from repro.fl import FLConfig, run_simulation
 
 ALPHAS = (0.1, 0.5, 1.0)
@@ -30,6 +30,10 @@ def main(alphas=ALPHAS, seed=0, verbose=False):
                 method_, sel_ = "drfl", "greedy"
             else:
                 method_, sel_ = method, sel or "greedy"
+            if not family_supports(p, method_):
+                emit(f"table1/{method}/alpha{alpha}", 0.0,
+                     f"skipped=unsupported_by_{p['model_family']}")
+                continue
             cfg = FLConfig(alpha=alpha, method=method_, selector=sel_,
                            seed=seed, marl_episodes=4, **p)
             h = run_simulation(cfg, verbose=verbose)

@@ -23,6 +23,40 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_path_items(tree, _path=()):
+    """Yield ``(path, leaf)`` for every leaf of a dict/list/tuple pytree.
+
+    Paths are tuples of dict keys / sequence indices: positional identity,
+    not object identity, so aliased leaves (the same array object reachable
+    at two paths) keep distinct entries — the property the scatter
+    aggregation table relies on."""
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from tree_path_items(v, _path + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from tree_path_items(v, _path + (i,))
+    else:
+        yield _path, tree
+
+
+def tree_path_align(ref, other, _path=()):
+    """Yield ``(path, other_leaf_or_None)`` for every leaf position of
+    ``ref`` — ``None`` where ``other`` (a possibly depth-truncated /
+    structure-poorer tree, e.g. a ScaleFL client delta) has no entry."""
+    if isinstance(ref, dict):
+        for k, v in ref.items():
+            o = other[k] if (other is not None and k in other) else None
+            yield from tree_path_align(v, o, _path + (k,))
+    elif isinstance(ref, (list, tuple)):
+        for i, v in enumerate(ref):
+            o = (other[i] if (other is not None and i < len(other))
+                 else None)
+            yield from tree_path_align(v, o, _path + (i,))
+    else:
+        yield _path, other
+
+
 def fedavg(updates: Sequence, weights: Optional[Sequence[float]] = None):
     """Plain FedAvg over pytrees (Eq. 2). ``weights`` ~ client data sizes."""
     n = len(updates)

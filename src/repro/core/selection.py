@@ -39,6 +39,21 @@ class Selection:
     model_choice: List[int]          # per-device submodel index (-1 = none)
     q_values: Optional[np.ndarray] = None
 
+    def __post_init__(self):
+        # ``model_choice`` must cover the whole fleet: the engine indexes
+        # it by raw device id, so a short list silently mis-indexes (or
+        # IndexErrors rounds later).  Participants out of its range are a
+        # selector bug — fail at construction, where the stack still
+        # points at the offender.
+        n = len(self.model_choice)
+        bad = [int(i) for i in self.participants
+               if not 0 <= int(i) < n]
+        if bad:
+            raise ValueError(
+                f"Selection.participants {bad} out of range for "
+                f"model_choice of length {n} (model_choice must have one "
+                f"entry per fleet device)")
+
 
 class SelectorBase:
     name = "base"
@@ -49,7 +64,8 @@ class SelectorBase:
                local_epochs: int = 5, batch_size: int = 32) -> Selection:
         raise NotImplementedError
 
-    def observe_reward(self, reward: float, sim_time: float = None):
+    def observe_reward(self, reward: float,
+                       sim_time: Optional[float] = None):
         """Credit the reward for the most recent ``select``.
 
         Under the event-driven engine this fires at EVENT time — when the
@@ -151,7 +167,8 @@ class MarlSelector(SelectorBase):
         return Selection(participants=chosen, model_choice=model_choice,
                          q_values=qv)
 
-    def observe_reward(self, reward: float, sim_time: float = None):
+    def observe_reward(self, reward: float,
+                       sim_time: Optional[float] = None):
         # QMIX is time-index-agnostic: only the reward ORDER (aligned with
         # select calls by the engine's in-dispatch-order commits) matters
         self.ep_rewards.append(float(reward))

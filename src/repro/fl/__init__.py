@@ -1,5 +1,10 @@
 from repro.fl.simulation import FLConfig, run_simulation  # noqa: F401
+from repro.fl.spec import (EnergySpec, EngineSpec, MarlSpec,  # noqa: F401
+                           ModelSpec, SimulationSpec, ensure_flat_config)
 from repro.fl.engine import (RoundEngine, build_world,  # noqa: F401
                              resolve_client_executor, sync_task_budget)
 from repro.fl.environment import FLEnv, FLEnvConfig  # noqa: F401
 from repro.core.fleet import FleetState, make_fleet_state  # noqa: F401
+from repro.models.family import (ModelFamily, get_family,  # noqa: F401
+                                 known_families, register_family,
+                                 resolve_family)

@@ -41,9 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.baselines import WIDTH_LEVELS, scalefl_submodel, width_slice_cnn
-from repro.fl import client as fl_client
-from repro.models import cnn
+from repro.models.family import resolve_family
 
 # dispatch accounting: "compiles" counts NEW (method, model, shape) program
 # signatures, "executions" counts bucket program launches.  The regression
@@ -63,24 +61,11 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
 
-_LOSS_FNS = {
-    "drfl": fl_client.drfl_submodel_loss,
-    "heterofl": fl_client.slice_submodel_loss,
-    "scalefl": fl_client.scalefl_submodel_loss,
-}
-
-
-def submodel_params(method: str, global_params, model_idx: int):
+def submodel_params(method: str, global_params, model_idx: int,
+                    family=None):
     """The initial tree every client in bucket ``model_idx`` trains."""
-    if method == "drfl":
-        return {"stem": global_params["stem"],
-                "stages": global_params["stages"][:model_idx + 1],
-                "exits": global_params["exits"][:model_idx + 1]}
-    if method == "heterofl":
-        return width_slice_cnn(global_params, WIDTH_LEVELS[model_idx])
-    if method == "scalefl":
-        return scalefl_submodel(global_params, model_idx)
-    raise ValueError(f"unknown method {method!r}")
+    return resolve_family(family).submodel_params(method, global_params,
+                                                  model_idx)
 
 
 # ---------------------------------------------------------------------------
@@ -172,9 +157,9 @@ def _scan_unroll() -> bool | int:
     return True if jax.default_backend() == "cpu" else 1
 
 
-@functools.partial(jax.jit, static_argnames=("method", "lr"))
+@functools.partial(jax.jit, static_argnames=("method", "lr", "family"))
 def _bucket_program(sub_params, x_all, y_all, gather, valid, *, method: str,
-                    lr: float):
+                    lr: float, family):
     """ONE program for a whole bucket.
 
     sub_params: the bucket's submodel tree (shared initial point)
@@ -183,7 +168,7 @@ def _bucket_program(sub_params, x_all, y_all, gather, valid, *, method: str,
 
     Returns (stacked delta pytree [P, ...], mean losses [P]).
     """
-    loss_fn = _LOSS_FNS[method]
+    loss_fn = family.loss_fn(method)
 
     def one_client(g_i, v_i):
         def body(carry, inp):
@@ -204,21 +189,19 @@ def _bucket_program(sub_params, x_all, y_all, gather, valid, *, method: str,
         delta = jax.tree.map(lambda a, b: a - b, params, sub_params)
         return delta, loss_sum / jnp.maximum(n_valid, 1.0)
 
-    if jax.default_backend() == "cpu":
-        # vmapped lax.conv with per-client kernels = grouped conv, which
-        # XLA CPU runs ~10x off BLAS speed at paper widths; trace the
-        # batched convs as patches+einsum (batched GEMMs) instead
-        with cnn.conv_via_patches():
-            return jax.vmap(one_client)(gather, valid)
-    return jax.vmap(one_client)(gather, valid)
+    # families may swap in a vmap-friendly forward for the batched trace
+    # (the CNN's patches+einsum convs on CPU, where vmapped per-client
+    # conv kernels lower to a pathological grouped-conv path)
+    with family.bucket_trace_context():
+        return jax.vmap(one_client)(gather, valid)
 
 
-def _signature(method: str, model_idx: int, sub_params, gather_shape,
-               data_shape, lr: float):
+def _signature(family, method: str, model_idx: int, sub_params,
+               gather_shape, data_shape, lr: float):
     shapes = tuple((tuple(l.shape), str(l.dtype))
                    for l in jax.tree.leaves(sub_params))
-    return (method, int(model_idx), tuple(gather_shape), tuple(data_shape),
-            float(lr), shapes)
+    return (family.name, method, int(model_idx), tuple(gather_shape),
+            tuple(data_shape), float(lr), shapes)
 
 
 @dataclasses.dataclass
@@ -238,18 +221,19 @@ class BucketResult:
 
 
 def run_bucket(method: str, global_params, x_all, y_all, bucket: Bucket, *,
-               lr: float) -> BucketResult:
+               lr: float, family=None) -> BucketResult:
     """Execute one bucket as a single jit program."""
-    sub = submodel_params(method, global_params, bucket.model_idx)
-    sig = _signature(method, bucket.model_idx, sub, bucket.gather.shape,
-                     x_all.shape, lr)
+    fam = resolve_family(family)
+    sub = fam.submodel_params(method, global_params, bucket.model_idx)
+    sig = _signature(fam, method, bucket.model_idx, sub,
+                     bucket.gather.shape, x_all.shape, lr)
     if sig not in _SEEN_SIGNATURES:
         _SEEN_SIGNATURES.add(sig)
         COUNTERS["compiles"] += 1
     COUNTERS["executions"] += 1
     stacked, losses = _bucket_program(
         sub, x_all, y_all, jnp.asarray(bucket.gather),
-        jnp.asarray(bucket.valid), method=method, lr=float(lr))
+        jnp.asarray(bucket.valid), method=method, lr=float(lr), family=fam)
     p = bucket.n_real
     p_pad = bucket.gather.shape[0]
     return BucketResult(model_idx=bucket.model_idx,
@@ -285,7 +269,7 @@ def run_cohort(method: str, global_params, x_all, y_all,
                parts: Sequence[np.ndarray], participants: Sequence[int],
                model_idxs: Sequence[int], seeds: Sequence[int],
                weights: Optional[Sequence[float]] = None, *, epochs: int,
-               batch: int, lr: float) -> CohortResult:
+               batch: int, lr: float, family=None) -> CohortResult:
     """Run a whole cohort's local training in <= n_buckets jit dispatches.
 
     ``parts`` is aligned with ``participants`` (one index array each);
@@ -296,6 +280,8 @@ def run_cohort(method: str, global_params, x_all, y_all,
                             epochs=epochs, batch=batch)
     x_all = jnp.asarray(x_all)
     y_all = jnp.asarray(y_all)
+    fam = resolve_family(family)
     return CohortResult(buckets=[
-        run_bucket(method, global_params, x_all, y_all, b, lr=lr)
+        run_bucket(method, global_params, x_all, y_all, b, lr=lr,
+                   family=fam)
         for b in buckets])

@@ -1,35 +1,37 @@
 """FL client-side local training (paper Step 5).
 
-Clients train with SGD + cross-entropy on their local shard.  Three client
-kinds mirror the three methods under comparison:
+Clients train with SGD + cross-entropy on their local shard.  The actual
+per-method training programs live on the :class:`repro.models.family.
+ModelFamily` singletons (``family.client_update(kind, ...)`` /
+``family.loss_fn(kind)``) so the FL layer is model-agnostic; this module
+keeps the stable flat API over the DEFAULT family plus the shared
+per-(round, device) seed derivation.
 
-* ``drfl_client_update``    — depth-prefix submodel (loss at exit m; grads
-  are exactly zero outside the submodel, so the returned full-structure
-  delta is already "zero-filled" for layer-aligned aggregation).
+Three client kinds mirror the three methods under comparison:
+
+* ``drfl_client_update``    — depth-prefix submodel (loss at every held
+  exit; grads are exactly zero outside the submodel, so the returned
+  full-structure delta is already "zero-filled" for layer-aligned
+  aggregation).
 * ``heterofl_client_update`` — width-sliced submodel (HeteroFL).
 * ``scalefl_client_update``  — depth+width submodel with self-distillation.
 
-Each kind jits one program per submodel index — shapes are static per index,
-so 4 programs cover the whole fleet.
+Each kind jits one program per submodel index per family — shapes are
+static per index, so ``num_submodels`` programs cover a whole fleet.
 
 This is the PER-CLIENT path (one dispatch per mini-batch): small fleets use
 it directly, and it is the parity reference for the bucketed-vmap executor
 (:mod:`repro.fl.batch`) that large fleets run — both train the same
-per-method losses exported below.  Per-step losses accumulate on device and
-sync to the host ONCE per client (:func:`_mean_loss`).
+per-method family losses.  Per-step losses accumulate on device and sync to
+the host ONCE per client (``family._mean_loss``).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.baselines import kd_loss, scalefl_submodel, width_slice_cnn, WIDTH_LEVELS
-from repro.data.loader import epoch_batches
-from repro.models import cnn
+from repro.models.family import resolve_family
 
 
 def client_update_seed(base_seed: int, round_idx: int, device_idx: int) -> int:
@@ -44,122 +46,57 @@ def client_update_seed(base_seed: int, round_idx: int, device_idx: int) -> int:
     ).generate_state(1)[0])
 
 
-def _ce(logits, y):
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    tgt = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
-    return jnp.mean(lse - tgt)
-
-
 # ---------------------------------------------------------------------------
-# per-method local losses, shared verbatim by the per-client steps below and
-# the bucketed-vmap executor (repro.fl.batch) so both paths train the same
-# objective on the same submodel tree
+# per-method local losses over the DEFAULT family — the bucketed executor
+# and custom harnesses should prefer ``family.loss_fn(kind)`` directly
 # ---------------------------------------------------------------------------
 
 
 def drfl_submodel_loss(sub, x, y):
-    """Joint CE over every exit the submodel holds (BranchyNet-style deep
-    supervision — each of the paper's layer-wise models carries a bottleneck
-    + classifier per block, so shallow exits keep learning on deep clients
-    and layer-aligned aggregation stays useful for Model_1..Model_m).
-    The deepest held exit carries full weight; shallower exits get 0.3."""
-    outs = cnn.apply_all_exits(sub, x)
-    loss = _ce(outs[-1], y)
-    for o in outs[:-1]:
-        loss = loss + 0.3 * _ce(o, y)
-    return loss / (1.0 + 0.3 * (len(outs) - 1))
+    return resolve_family().loss_fn("drfl")(sub, x, y)
 
 
 def slice_submodel_loss(sub, x, y):
-    """Width-sliced trees (HeteroFL): loss at the tree's deepest exit."""
-    outs = cnn.apply_all_exits(sub, x)
-    return _ce(outs[-1], y)
+    return resolve_family().loss_fn("heterofl")(sub, x, y)
 
 
 def scalefl_submodel_loss(sub, x, y):
-    """Depth+width tree; CE at every held exit + KD deepest->shallower."""
-    outs = cnn.apply_all_exits(sub, x)
-    teacher = outs[-1]
-    loss = _ce(teacher, y)
-    for s in outs[:-1]:
-        loss = loss + 0.5 * (_ce(s, y) + kd_loss(s, jax.lax.stop_gradient(teacher)))
-    return loss / max(len(outs), 1)
+    return resolve_family().loss_fn("scalefl")(sub, x, y)
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _drfl_sgd_step(params, x, y, model_idx: int, lr: float = 0.05):
-    def loss_fn(p):
-        sub = {"stem": p["stem"], "stages": p["stages"][:model_idx + 1],
-               "exits": p["exits"][:model_idx + 1]}
-        return drfl_submodel_loss(sub, x, y)
-
-    loss, grads = jax.value_and_grad(loss_fn)(params)
-    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-    return new, loss
+# ---------------------------------------------------------------------------
+# flat client-update API (defaults to the registered default family)
+# ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _slice_sgd_step(params, x, y, lr: float = 0.05):
-    loss, grads = jax.value_and_grad(slice_submodel_loss)(params, x, y)
-    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-    return new, loss
-
-
-@jax.jit
-def _scalefl_sgd_step(params, x, y, lr: float = 0.05):
-    loss, grads = jax.value_and_grad(scalefl_submodel_loss)(params, x, y)
-    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-    return new, loss
-
-
-def _mean_loss(losses) -> float:
-    """ONE host sync for the whole local run: the per-step device scalars
-    stay un-synced (jax dispatch keeps streaming) and are reduced on device;
-    only the final mean crosses to the host."""
-    if not losses:
-        return 0.0
-    return float(jnp.mean(jnp.stack(losses)))
-
-
-def _run_epochs(step_fn, params, x, y, epochs, batch, rng, lr):
-    losses = []
-    for _ in range(epochs):
-        for xb, yb in epoch_batches(x, y, batch, rng):
-            params, l = step_fn(params, jnp.asarray(xb), jnp.asarray(yb), lr)
-            losses.append(l)
-    return params, _mean_loss(losses)
+def client_update(method: str, global_params, model_idx: int, x, y, *,
+                  epochs=5, batch=32, lr=0.05, seed=0, family=None
+                  ) -> Tuple[Dict, float]:
+    """Family-routed local training: ``(delta pytree, mean local loss)``."""
+    return resolve_family(family).client_update(
+        method, global_params, model_idx, x, y, epochs=epochs, batch=batch,
+        lr=lr, seed=seed)
 
 
 def drfl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
-                       batch=32, lr=0.05, seed=0) -> Tuple[Dict, float]:
+                       batch=32, lr=0.05, seed=0, family=None
+                       ) -> Tuple[Dict, float]:
     """Returns (delta pytree full structure, mean local loss)."""
-    rng = np.random.default_rng(seed)
-    params = global_params
-    losses = []
-    for _ in range(epochs):
-        for xb, yb in epoch_batches(x, y, batch, rng):
-            params, l = _drfl_sgd_step(params, jnp.asarray(xb), jnp.asarray(yb),
-                                       model_idx, lr)
-            losses.append(l)
-    delta = jax.tree.map(lambda a, b: a - b, params, global_params)
-    return delta, _mean_loss(losses)
+    return client_update("drfl", global_params, model_idx, x, y,
+                         epochs=epochs, batch=batch, lr=lr, seed=seed,
+                         family=family)
 
 
 def heterofl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
-                           batch=32, lr=0.05, seed=0):
+                           batch=32, lr=0.05, seed=0, family=None):
     """Returns (sliced delta, mean loss); slice width = WIDTH_LEVELS[idx]."""
-    frac = WIDTH_LEVELS[model_idx]
-    sub = width_slice_cnn(global_params, frac)
-    rng = np.random.default_rng(seed)
-    new, loss = _run_epochs(_slice_sgd_step, sub, x, y, epochs, batch, rng, lr)
-    delta = jax.tree.map(lambda a, b: a - b, new, sub)
-    return delta, loss
+    return client_update("heterofl", global_params, model_idx, x, y,
+                         epochs=epochs, batch=batch, lr=lr, seed=seed,
+                         family=family)
 
 
 def scalefl_client_update(global_params, model_idx: int, x, y, *, epochs=5,
-                          batch=32, lr=0.05, seed=0):
-    sub = scalefl_submodel(global_params, model_idx)
-    rng = np.random.default_rng(seed)
-    new, loss = _run_epochs(_scalefl_sgd_step, sub, x, y, epochs, batch, rng, lr)
-    delta = jax.tree.map(lambda a, b: a - b, new, sub)
-    return delta, loss
+                          batch=32, lr=0.05, seed=0, family=None):
+    return client_update("scalefl", global_params, model_idx, x, y,
+                         epochs=epochs, batch=batch, lr=lr, seed=seed,
+                         family=family)

@@ -57,7 +57,7 @@ from repro.data.synthetic import synthetic_image_dataset
 from repro.fl import batch as fl_batch
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
-from repro.models import cnn
+from repro.models.family import ModelFamily, get_family
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +79,7 @@ class World:
     sizes: tuple
     fractions: tuple
     n_total: int
+    family: ModelFamily = None
 
 
 def build_world(cfg) -> World:
@@ -100,36 +101,34 @@ def build_world(cfg) -> World:
     fleet = fleet.replace(remaining=fleet.battery * cfg.energy_scale)
     if cfg.hotplug_n:                   # hot-plug devices: not yet connected
         fleet = fleet_disconnect(fleet, cfg.n_devices)
-    global_params = cnn.init(key, cfg.num_classes, width_mult=cfg.width_mult)
-    M = cnn.num_submodels()
+    family = get_family(getattr(cfg, "model_family", None))
+    global_params = family.init(key, cfg.num_classes,
+                                width_mult=cfg.width_mult, hw=cfg.hw)
+    M = family.num_submodels()
     # Energy/time accounting (Eq. 5 & 7) is calibrated to the PAPER-scale
-    # backbone (full-width ResNet-18 on 32x32): the slim CNN is only the
+    # backbone (full-width model on 32x32): the slim model is only the
     # CPU-budget compute proxy; batteries must see paper-scale costs for the
     # wooden-barrel dynamics to reproduce.
-    ref_params = jax.eval_shape(
-        lambda k: cnn.init(k, cfg.num_classes, width_mult=1.0),
-        jax.random.PRNGKey(0))
-    sizes = tuple(
-        sum(x.size * x.dtype.itemsize
-            for x in jax.tree.leaves(cnn.submodel_param_tree(ref_params, m)))
-        for m in range(M))
-    full_flops = cnn.flops_per_sample(M - 1, 32, 1.0)
-    fractions = tuple(cnn.flops_per_sample(m, 32, 1.0) / full_flops
-                      for m in range(M))
+    sizes, fractions = family.cost_model(cfg.num_classes)
     return World(x_tr=x_tr, y_tr=y_tr, x_val=x_val, y_val=y_val, parts=parts,
                  fleet=fleet, global_params=global_params, n_models=M,
-                 sizes=sizes, fractions=fractions, n_total=n_total)
+                 sizes=sizes, fractions=fractions, n_total=n_total,
+                 family=family)
 
 
-_CLIENT_FNS = {"drfl": "drfl_client_update",
-               "heterofl": "heterofl_client_update",
-               "scalefl": "scalefl_client_update"}
+def _check_selection(sel, n_total: int) -> None:
+    """The engine indexes ``model_choice`` by raw device id — a selector
+    returning fewer entries than the fleet silently mis-indexes."""
+    if len(sel.model_choice) != n_total:
+        raise ValueError(
+            f"selector returned {len(sel.model_choice)} model choices "
+            f"for a fleet of {n_total}")
 
 
-def _client_update(cfg, global_params, m, xi, yi, seed):
-    fn = getattr(fl_client, _CLIENT_FNS[cfg.method])
-    return fn(global_params, m, xi, yi, epochs=cfg.local_epochs,
-              batch=cfg.batch_size, lr=cfg.lr, seed=seed)
+def _client_update(cfg, family, global_params, m, xi, yi, seed):
+    return family.client_update(cfg.method, global_params, m, xi, yi,
+                                epochs=cfg.local_epochs, batch=cfg.batch_size,
+                                lr=cfg.lr, seed=seed)
 
 
 # Above this per-step work, XLA CPU executes the per-client convs at
@@ -156,9 +155,10 @@ def resolve_client_executor(cfg) -> str:
         if cfg.n_devices < 64:
             return "perclient"
         if jax.default_backend() == "cpu":
-            step_flops = (cnn.flops_per_sample(cnn.num_submodels() - 1,
-                                               cfg.hw, cfg.width_mult)
-                          * cfg.batch_size)
+            family = get_family(getattr(cfg, "model_family", None))
+            step_flops = (family.flops_per_sample(
+                family.num_submodels() - 1, cfg.hw, cfg.width_mult)
+                * cfg.batch_size)
             return ("batched" if step_flops <= _CPU_BATCHED_STEP_FLOPS
                     else "perclient")
         return "batched"
@@ -175,7 +175,8 @@ def _run_batched_cohort(cfg, world, global_params, device_ids, model_idxs,
     return fl_batch.run_cohort(
         cfg.method, global_params, x_dev, y_dev,
         [world.parts[i] for i in device_ids], device_ids, model_idxs, seeds,
-        epochs=cfg.local_epochs, batch=cfg.batch_size, lr=cfg.lr)
+        epochs=cfg.local_epochs, batch=cfg.batch_size, lr=cfg.lr,
+        family=world.family)
 
 
 def sync_task_budget(cfg) -> int:
@@ -239,7 +240,8 @@ class RoundEngine:
                 "reward": [], "wall_clock": [], "sim_time": [], "idle": [],
                 "dropouts": 0, "idle_time": 0.0, "engine": "sync"}
         prev_acc = float(np.mean(
-            fl_server.evaluate(global_params, w.x_val, w.y_val)))
+            fl_server.evaluate(global_params, w.x_val, w.y_val,
+                               family=w.family)))
         e_prev = fleet_total_remaining(fleet)
         w1, w2, w3 = cfg.reward_weights
         rows = np.arange(w.n_total)
@@ -262,6 +264,7 @@ class RoundEngine:
             k = max(1, int(round(cfg.participation * n_connected)))
             sel = selector.select(fleet, t, k, w.sizes, w.fractions,
                                   cfg.local_epochs, cfg.batch_size)
+            _check_selection(sel, w.n_total)
 
             choice = np.asarray(sel.model_choice, np.int64)
             active = choice >= 0
@@ -297,7 +300,8 @@ class RoundEngine:
                     global_params = fl_server.aggregate_drfl_stacked(
                         global_params,
                         [(b.model_idx, b.stacked_delta, b.weights, None)
-                         for b in res.buckets], server_lr=cfg.server_lr)
+                         for b in res.buckets], server_lr=cfg.server_lr,
+                        family=w.family)
                 else:
                     contribs = res.unstacked()
                     global_params = fl_server.aggregate_sliced(
@@ -311,21 +315,22 @@ class RoundEngine:
                     xi = w.x_tr[w.parts[i]]
                     yi = w.y_tr[w.parts[i]]
                     upd_seed = fl_client.client_update_seed(cfg.seed, t, i)
-                    d_, _ = _client_update(cfg, global_params, m, xi, yi,
-                                           upd_seed)
+                    d_, _ = _client_update(cfg, w.family, global_params, m,
+                                           xi, yi, upd_seed)
                     deltas.append(d_)
                     idxs.append(m)
                     weights.append(float(len(xi)))
                 if cfg.method == "drfl":
                     global_params = fl_server.aggregate_drfl(
                         global_params, deltas, idxs, weights,
-                        server_lr=cfg.server_lr)
+                        server_lr=cfg.server_lr, family=w.family)
                 else:
                     global_params = fl_server.aggregate_sliced(
                         global_params, deltas, weights)
                 n_agg += 1
 
-            accs = fl_server.evaluate(global_params, w.x_val, w.y_val)
+            accs = fl_server.evaluate(global_params, w.x_val, w.y_val,
+                                      family=w.family)
             acc = float(np.mean(accs))
             e_now = fleet_total_remaining(fleet)
             reward = (w1 * (acc - prev_acc) - w2 * (e_prev - e_now)
@@ -399,7 +404,8 @@ class RoundEngine:
                 "idle_time": 0.0, "wait_for_work": 0.0, "hotplug": None,
                 "engine": "async"}
         acc_prev = float(np.mean(
-            fl_server.evaluate(global_params, w.x_val, w.y_val)))
+            fl_server.evaluate(global_params, w.x_val, w.y_val,
+                               family=w.family)))
 
         state = dict(now=0.0, version=0, seq=0, vround=0,
                      tasks_started=0, completions=0, inflight=0,
@@ -473,6 +479,7 @@ class RoundEngine:
                                   state["vround"], n_sel, w.sizes,
                                   w.fractions, cfg.local_epochs,
                                   cfg.batch_size)
+            _check_selection(sel, w.n_total)
             choice = np.asarray(sel.model_choice, np.int64)
             active = choice >= 0
             if active.any():
@@ -558,7 +565,8 @@ class RoundEngine:
 
         def emit_row():
             now = state["now"]
-            accs = fl_server.evaluate(global_params, w.x_val, w.y_val)
+            accs = fl_server.evaluate(global_params, w.x_val, w.y_val,
+                                      family=w.family)
             acc = float(np.mean(accs))
             # re-baseline the accuracy term here so eval_every > 1 doesn't
             # leak un-credited progress into later event rewards
@@ -624,7 +632,8 @@ class RoundEngine:
                     # dispatch; the server reconciles drift via staleness
                     seed = fl_client.client_update_seed(cfg.seed,
                                                         task["dispatch"], i)
-                    delta, _ = _client_update(cfg, task["params"], task["m"],
+                    delta, _ = _client_update(cfg, w.family, task["params"],
+                                              task["m"],
                                               w.x_tr[w.parts[i]],
                                               w.y_tr[w.parts[i]], seed)
                 if cfg.method == "drfl":
@@ -635,12 +644,14 @@ class RoundEngine:
                             global_params,
                             [(task["m"], delta_1, [float(n_i)],
                               [staleness])],
-                            server_lr=cfg.server_lr, staleness_decay=decay)
+                            server_lr=cfg.server_lr, staleness_decay=decay,
+                            family=w.family)
                     else:
                         global_params = fl_server.aggregate_drfl(
                             global_params, [delta], [task["m"]],
                             [float(n_i)], server_lr=cfg.server_lr,
-                            staleness=[staleness], staleness_decay=decay)
+                            staleness=[staleness], staleness_decay=decay,
+                            family=w.family)
                 else:
                     if batched:
                         delta = jax.tree.map(lambda a: a[row],
@@ -663,7 +674,8 @@ class RoundEngine:
             # rewards; for non-learning selectors observe_reward is a
             # no-op, so only the virtual-round boundary evaluates
             if marl and aggregated and state["version"] % eval_every == 0:
-                accs = fl_server.evaluate(global_params, w.x_val, w.y_val)
+                accs = fl_server.evaluate(global_params, w.x_val, w.y_val,
+                                          family=w.family)
                 acc = float(np.mean(accs))
                 credit(cid, w1 * (acc - state["acc_prev"]))
                 state["acc_prev"] = acc

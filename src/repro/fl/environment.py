@@ -52,6 +52,22 @@ class FLEnvConfig:
     seed: int = 0
     mode: str = "sync"                 # sync (barrier) | async (event-time)
 
+    @classmethod
+    def for_family(cls, family: str = "cnn", num_classes: int = 10,
+                   **kwargs) -> "FLEnvConfig":
+        """Env config whose action space and cost model come from a
+        registered :class:`repro.models.family.ModelFamily` (the same
+        paper-scale Eq. 5/7 calibration ``build_world`` charges), so
+        policies researched here transfer to ``run_simulation`` on that
+        family."""
+        from repro.models.family import get_family
+        fam = get_family(family)
+        sizes, fractions = fam.cost_model(num_classes)
+        return cls(n_models=fam.num_submodels(),
+                   model_bytes=tuple(float(s) for s in sizes),
+                   model_fractions=tuple(float(f) for f in fractions),
+                   **kwargs)
+
 
 class FLEnv:
     """step(actions) -> (obs, reward, done, info).

@@ -6,6 +6,12 @@ Aggregation arms:
                updates arriving late under the async round engine
 * HeteroFL   — width-slice scatter averaging
 * ScaleFL    — depth+width scatter averaging (structure-tolerant)
+
+Model-specific structure (masks, aggregation groups, stack templates,
+evaluation forward passes) is delegated to the pluggable
+:class:`repro.models.family.ModelFamily`; every entry point takes an
+optional ``family`` (name or instance) and defaults to the registered
+default family, so existing flat callsites keep working unchanged.
 """
 from __future__ import annotations
 
@@ -17,8 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation
-from repro.core.aggregation import layerwise_aggregate
-from repro.models import cnn
+from repro.core.aggregation import (layerwise_aggregate, tree_path_align,
+                                    tree_path_items)
+from repro.models.family import resolve_family
 
 
 # ---------------------------------------------------------------------------
@@ -26,60 +33,22 @@ from repro.models import cnn
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _eval_batch(params, x, y):
-    outs = cnn.apply_all_exits(params, x)
-    return jnp.stack([jnp.mean((jnp.argmax(o, -1) == y)) for o in outs])
-
-
 def evaluate(params, x_val: np.ndarray, y_val: np.ndarray,
-             batch: int = 256) -> np.ndarray:
+             batch: int = 256, family=None) -> np.ndarray:
     """Per-exit accuracy on the server validation set."""
+    eval_batch = resolve_family(family).eval_fn()
     accs, n = [], 0
     for i in range(0, len(x_val), batch):
         xb = jnp.asarray(x_val[i:i + batch])
         yb = jnp.asarray(y_val[i:i + batch])
-        accs.append(np.asarray(_eval_batch(params, xb, yb)) * len(xb))
+        accs.append(np.asarray(eval_batch(params, xb, yb)) * len(xb))
         n += len(xb)
     return np.sum(accs, axis=0) / max(n, 1)
 
 
 # ---------------------------------------------------------------------------
-# DR-FL aggregation masks for the CNN tree
+# DR-FL layer-aligned aggregation (list-based parity reference)
 # ---------------------------------------------------------------------------
-
-
-# mask pytrees depend only on the tree STRUCTURE and (model_idx, scale) —
-# not on parameter values — so they are cached and shared across aggregation
-# events (the async engine rebuilds masks once per completion otherwise).
-# Mask leaves are immutable jnp scalars, safe to alias between calls.
-_MASK_CACHE: dict = {}
-
-
-def cnn_update_mask(global_params, model_idx: int, scale: float = 1.0):
-    """Scalar masks matching the CNN tree: stem + stages<=m + exits<=m
-    (clients deep-supervise every exit their submodel holds).  ``scale``
-    replaces the 1.0 of held layers — the staleness path builds decay masks
-    (value alpha_s per exit-layer) with the same structure."""
-    key = (jax.tree.structure(global_params), int(model_idx), float(scale))
-    hit = _MASK_CACHE.get(key)
-    if hit is not None:
-        return hit
-
-    def const(tree, v):
-        return jax.tree.map(lambda _: jnp.asarray(v, jnp.float32), tree)
-
-    mask = {
-        "stem": const(global_params["stem"], scale),
-        "stages": [const(s, scale if i <= model_idx else 0.0)
-                   for i, s in enumerate(global_params["stages"])],
-        "exits": [const(e, scale if i <= model_idx else 0.0)
-                  for i, e in enumerate(global_params["exits"])],
-    }
-    if len(_MASK_CACHE) > 512:          # staleness scales are open-ended
-        _MASK_CACHE.clear()
-    _MASK_CACHE[key] = mask
-    return mask
 
 
 def staleness_scale(staleness: float, decay: float = 0.5) -> float:
@@ -96,7 +65,7 @@ def staleness_scale(staleness: float, decay: float = 0.5) -> float:
 def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
                    weights: Sequence[float], server_lr: float = 1.0,
                    staleness: Optional[Sequence[float]] = None,
-                   staleness_decay: float = 0.5):
+                   staleness_decay: float = 0.5, family=None):
     """DR-FL layer-aligned aggregation, optionally staleness-aware.
 
     With ``staleness`` given (one entry per delta: aggregations elapsed
@@ -107,7 +76,8 @@ def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
     so a lone stale contributor moves a layer by alpha * update (absolute
     FedAsync damping), not by the full update renormalized.  ``staleness``
     of all zeros (or None) reproduces the synchronous path bit-for-bit."""
-    masks = [cnn_update_mask(global_params, m) for m in model_idxs]
+    fam = resolve_family(family)
+    masks = [fam.update_mask(global_params, m) for m in model_idxs]
     if staleness is not None and any(s > 0 for s in staleness):
         scaled = []
         for d, m, s in zip(deltas, model_idxs, staleness):
@@ -115,7 +85,7 @@ def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
             if a == 1.0:
                 scaled.append(d)
                 continue
-            smask = cnn_update_mask(global_params, m, scale=a)
+            smask = fam.update_mask(global_params, m, scale=a)
             scaled.append(jax.tree.map(
                 lambda u, sm: (u.astype(jnp.float32) * sm).astype(u.dtype),
                 d, smask))
@@ -128,56 +98,33 @@ def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
 # stacked DR-FL aggregation: [N, R, seg] rows -> Pallas layer_agg kernel
 # ---------------------------------------------------------------------------
 #
-# The CNN tree's aggregation groups are stem + stages[i] + exits[i] (the
-# units cnn_update_mask masks as wholes).  Each group flattens into
-# consecutive fixed-width segment rows (core.aggregation.StackTemplate);
-# the per-client hold masks and staleness alphas become a [N, R] mask
-# matrix, and the whole of DR-FL Step 2 is ONE fused kernel dispatch
-# (interpret mode on CPU, the MXU kernel on TPU) instead of a tree.map
-# over ~60 leaves per client.  The list-based path above stays as the
-# parity reference.
-
-_TEMPLATE_CACHE: dict = {}
-
-
-def _cnn_groups(params) -> List:
-    return [params["stem"]] + list(params["stages"]) + list(params["exits"])
-
-
-def _held_groups(n_stages: int, model_idx: int) -> List[bool]:
-    held = [i <= model_idx for i in range(n_stages)]
-    return [True] + held + held
-
-
-def cnn_stack_template(global_params, seg: int = 1024):
-    shapes = tuple((tuple(l.shape), str(l.dtype))
-                   for l in jax.tree.leaves(global_params))
-    key = (shapes, int(seg))
-    if key not in _TEMPLATE_CACHE:
-        _TEMPLATE_CACHE[key] = aggregation.build_stack_template(
-            _cnn_groups(global_params), seg=seg)
-    return _TEMPLATE_CACHE[key]
+# A family's aggregation groups (``family.stack_groups`` — for layer-wise
+# trees: stem + stages[i] + exits[i], the units ``family.update_mask``
+# masks as wholes) each flatten into consecutive fixed-width segment rows
+# (core.aggregation.StackTemplate); the per-client hold masks and staleness
+# alphas become a [N, R] mask matrix, and the whole of DR-FL Step 2 is ONE
+# fused kernel dispatch (interpret mode on CPU, the MXU kernel on TPU)
+# instead of a tree.map over ~60 leaves per client.  The list-based path
+# above stays as the parity reference.
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("model_idxs", "server_lr", "any_stale", "use_kernel",
-                     "interpret"))
+    static_argnames=("family", "model_idxs", "server_lr", "any_stale",
+                     "use_kernel", "interpret"))
 def _stacked_agg_program(global_params, deltas, weights, alphas, *,
-                         model_idxs, server_lr, any_stale, use_kernel,
-                         interpret):
+                         family, model_idxs, server_lr, any_stale,
+                         use_kernel, interpret):
     """The whole of DR-FL Step 2 as ONE jit program: flatten bucket-stacked
     deltas into [N, R, seg] rows, masked-mean them (Pallas kernel on TPU /
     fused einsum elsewhere), scatter the averaged rows back onto the global
-    tree.  Compiled once per (bucket model indices, padded shapes)."""
-    template = cnn_stack_template(global_params)
-    n_stages = len(global_params["stages"])
+    tree.  Compiled once per (family, bucket model indices, padded shapes)."""
+    template = family.stack_template(global_params)
     us, row_masks = [], []
     for model_idx, delta in zip(model_idxs, deltas):
-        held = _held_groups(n_stages, model_idx)
-        sub_groups = ([delta["stem"]] + list(delta["stages"])
-                      + list(delta["exits"]))
-        u = aggregation.stack_group_rows(sub_groups, template, held,
+        held = family.held_groups(global_params, model_idx)
+        u = aggregation.stack_group_rows(family.stack_groups(delta),
+                                         template, held,
                                          stacked=True)        # [P, R, seg]
         row_mask = aggregation.group_row_mask(held, template)  # [R]
         us.append(u)
@@ -190,17 +137,16 @@ def _stacked_agg_program(global_params, deltas, weights, alphas, *,
     rows = aggregation.stacked_masked_mean(
         u_all, m_all, w_all, a_all, interpret=interpret,
         use_kernel=use_kernel)
-    new_groups = aggregation.unstack_apply(_cnn_groups(global_params), rows,
-                                           template, server_lr=server_lr)
-    return {"stem": new_groups[0],
-            "stages": new_groups[1:1 + n_stages],
-            "exits": new_groups[1 + n_stages:]}
+    new_groups = aggregation.unstack_apply(family.stack_groups(global_params),
+                                           rows, template,
+                                           server_lr=server_lr)
+    return family.unstack_groups(global_params, new_groups)
 
 
 def aggregate_drfl_stacked(global_params, buckets, server_lr: float = 1.0,
                            staleness_decay: float = 0.5,
                            interpret: Optional[bool] = None,
-                           use_kernel: Optional[bool] = None):
+                           use_kernel: Optional[bool] = None, family=None):
     """DR-FL layer-aligned aggregation over bucket-stacked deltas.
 
     ``buckets``: iterable of ``(model_idx, stacked_delta, weights,
@@ -214,6 +160,7 @@ def aggregate_drfl_stacked(global_params, buckets, server_lr: float = 1.0,
     skips the rescale so it is exactly the plain masked mean."""
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
+    fam = resolve_family(family)
     model_idxs, deltas, ws, alphas = [], [], [], []
     any_stale = False
     for model_idx, delta, weights, stal in buckets:
@@ -231,9 +178,9 @@ def aggregate_drfl_stacked(global_params, buckets, server_lr: float = 1.0,
         return global_params
     return _stacked_agg_program(
         global_params, tuple(deltas), tuple(ws), tuple(alphas),
-        model_idxs=tuple(model_idxs), server_lr=float(server_lr),
-        any_stale=any_stale, use_kernel=bool(use_kernel),
-        interpret=interpret)
+        family=fam, model_idxs=tuple(model_idxs),
+        server_lr=float(server_lr), any_stale=any_stale,
+        use_kernel=bool(use_kernel), interpret=interpret)
 
 
 def aggregate_drfl_from_list(global_params, deltas: List,
@@ -243,15 +190,16 @@ def aggregate_drfl_from_list(global_params, deltas: List,
                              staleness: Optional[Sequence[float]] = None,
                              staleness_decay: float = 0.5,
                              interpret: Optional[bool] = None,
-                             use_kernel: Optional[bool] = None):
+                             use_kernel: Optional[bool] = None,
+                             family=None):
     """Stacked-kernel aggregation over FULL-STRUCTURE delta pytrees (the
     list-based :func:`aggregate_drfl` contract) — each delta becomes a
     P=1 bucket.  Used for parity testing the kernel path against the
     list-based reference on identical inputs."""
+    fam = resolve_family(family)
     buckets = []
     for j, (d, m) in enumerate(zip(deltas, model_idxs)):
-        sub = {"stem": d["stem"], "stages": d["stages"][:m + 1],
-               "exits": d["exits"][:m + 1]}
+        sub = fam.submodel_tree(d, m)
         stal = None if staleness is None else [staleness[j]]
         buckets.append((m, jax.tree.map(lambda a: a[None], sub),
                         [weights[j]], stal))
@@ -259,7 +207,7 @@ def aggregate_drfl_from_list(global_params, deltas: List,
                                   server_lr=server_lr,
                                   staleness_decay=staleness_decay,
                                   interpret=interpret,
-                                  use_kernel=use_kernel)
+                                  use_kernel=use_kernel, family=fam)
 
 
 # ---------------------------------------------------------------------------
@@ -279,43 +227,32 @@ def _scatter_avg(gp, contribs):
     return (gp.astype(jnp.float32) + avg).astype(gp.dtype)
 
 
-def _collect(gp, delta, w, out):
-    """Recursively align (possibly truncated) delta subtree against global."""
-    if isinstance(gp, dict):
-        for k, v in gp.items():
-            if delta is not None and k in delta:
-                _collect(v, delta[k], w, out)
-            else:
-                _collect(v, None, w, out)
-    elif isinstance(gp, (list, tuple)):
-        for i, v in enumerate(gp):
-            d = delta[i] if (delta is not None and i < len(delta)) else None
-            _collect(v, d, w, out)
-    else:
-        out.setdefault(id(gp), (gp, []))
-        if delta is not None:
-            out[id(gp)][1].append((delta, w))
-
-
 def aggregate_sliced(global_params, deltas: List, weights: Sequence[float]):
-    """Structure- and shape-tolerant scatter aggregation (HeteroFL/ScaleFL)."""
-    table: Dict[int, tuple] = {}
-    # first register every global leaf (ordering via one pass with None)
-    _collect(global_params, None, 0.0, table)
+    """Structure- and shape-tolerant scatter aggregation (HeteroFL/ScaleFL).
+
+    Contributions are collected per TREE PATH: a client's (possibly
+    depth-truncated, width-sliced) delta subtree is aligned against the
+    global tree position-by-position, so aliased leaves — the same array
+    object reachable at two paths, which an ``id()``-keyed table would
+    silently merge — stay independent aggregation targets."""
+    table: Dict[tuple, list] = {
+        path: [] for path, _ in tree_path_items(global_params)}
     for d, w in zip(deltas, weights):
-        _collect(global_params, d, float(w), table)
+        for path, leaf in tree_path_align(global_params, d):
+            if leaf is not None:
+                table[path].append((leaf, float(w)))
     wtot = float(sum(weights)) or 1.0
 
-    def rebuild(gp):
+    def rebuild(gp, path=()):
         if isinstance(gp, dict):
-            return {k: rebuild(v) for k, v in gp.items()}
+            return {k: rebuild(v, path + (k,)) for k, v in gp.items()}
         if isinstance(gp, (list, tuple)):
-            t = [rebuild(v) for v in gp]
+            t = [rebuild(v, path + (i,)) for i, v in enumerate(gp)]
             return t if isinstance(gp, list) else tuple(t)
-        leaf, contribs = table[id(gp)]
+        contribs = table[path]
         if not contribs:
-            return leaf
+            return gp
         contribs = [(u, w / wtot) for u, w in contribs]
-        return _scatter_avg(leaf, contribs)
+        return _scatter_avg(gp, contribs)
 
     return rebuild(global_params)

@@ -38,7 +38,7 @@ from repro.core.selection import (GreedySelector, MarlSelector, RandomSelector,
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
 from repro.fl.engine import RoundEngine, build_world, sync_task_budget
-from repro.models import cnn
+from repro.models.family import get_family
 
 
 @dataclasses.dataclass
@@ -57,6 +57,8 @@ class FLConfig:
     hw: int = 16                        # image size (CPU budget: 16x16)
     width_mult: float = 0.25            # CNN slimming for CPU-budget runs
     seed: int = 0
+    model_family: str = "cnn"           # registered ModelFamily (see
+                                        # repro.models.family / fl/spec.py)
     method: str = "drfl"                # drfl | heterofl | scalefl
     selector: str = "marl"              # marl | greedy | random | static
     reward_weights: tuple = (1000.0, 0.01, 1.0)
@@ -109,19 +111,26 @@ def _make_buffer(cfg: FLConfig):
                         n_agents * OBS_DIM, cfg.seed)
 
 
-def run_simulation(cfg: FLConfig, verbose: bool = False) -> Dict:
-    """Runs the FL simulation.  With ``marl_episodes > 1`` and the MARL
-    selector, earlier episodes pre-train the QMIX policy (fresh fleet +
-    global model each episode, persistent learner + replay buffer) and the
-    LAST episode is reported — the CPU-scale analogue of the paper's long
-    online runs."""
+def run_simulation(cfg, verbose: bool = False) -> Dict:
+    """Runs the FL simulation.  ``cfg`` is an :class:`FLConfig` (the stable
+    flat compatibility surface) or a typed :class:`repro.fl.spec.
+    SimulationSpec`; both are validated up front, so a typo like
+    ``selector="mral"`` or ``engine_mode="asynch"`` raises here instead of
+    deep inside a run.  With ``marl_episodes > 1`` and the MARL selector,
+    earlier episodes pre-train the QMIX policy (fresh fleet + global model
+    each episode, persistent learner + replay buffer) and the LAST episode
+    is reported — the CPU-scale analogue of the paper's long online
+    runs."""
+    from repro.fl.spec import ensure_flat_config
+    cfg = ensure_flat_config(cfg)
     selector = None
     buffer = None
     episodes = cfg.marl_episodes if (cfg.method == "drfl"
                                      and cfg.selector == "marl") else 1
     for ep in range(episodes):
         if selector is None:
-            selector = _make_selector(cfg, cnn.num_submodels())
+            selector = _make_selector(
+                cfg, get_family(cfg.model_family).num_submodels())
         marl = selector if isinstance(selector, MarlSelector) else None
         if marl:
             if buffer is None:
@@ -138,8 +147,9 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> Dict:
 # ---------------------------------------------------------------------------
 #
 # This is the pre-engine round loop, kept VERBATIM (modulo the shared
-# build_world setup and the collision-free client seeds) as the parity
-# contract for RoundEngine's sync mode — the same role the scalar
+# build_world setup, the collision-free client seeds, and the family=
+# routing that keeps it runnable on any registered model family) as the
+# parity contract for RoundEngine's sync mode — the same role the scalar
 # DeviceState path in repro.core.energy plays for the vectorized FleetState
 # kernels.  tests/test_engine.py asserts engine sync histories match this
 # bit-for-bit; do not "improve" it.
@@ -170,7 +180,8 @@ def _run_once_reference(cfg: FLConfig, verbose=False, selector=None,
     hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
             "alive": [], "participants": [], "model_choices": [],
             "reward": [], "wall_clock": [], "dropouts": 0}
-    prev_acc = float(np.mean(fl_server.evaluate(global_params, x_val, y_val)))
+    prev_acc = float(np.mean(fl_server.evaluate(global_params, x_val, y_val,
+                                                family=w.family)))
     e_prev = fleet_total_remaining(fleet)
     w1, w2, w3 = cfg.reward_weights
     rows = np.arange(n_total)
@@ -214,15 +225,18 @@ def _run_once_reference(cfg: FLConfig, verbose=False, selector=None,
             if cfg.method == "drfl":
                 d_, _ = fl_client.drfl_client_update(
                     global_params, m, xi, yi, epochs=cfg.local_epochs,
-                    batch=cfg.batch_size, lr=cfg.lr, seed=upd_seed)
+                    batch=cfg.batch_size, lr=cfg.lr, seed=upd_seed,
+                    family=w.family)
             elif cfg.method == "heterofl":
                 d_, _ = fl_client.heterofl_client_update(
                     global_params, m, xi, yi, epochs=cfg.local_epochs,
-                    batch=cfg.batch_size, lr=cfg.lr, seed=upd_seed)
+                    batch=cfg.batch_size, lr=cfg.lr, seed=upd_seed,
+                    family=w.family)
             else:
                 d_, _ = fl_client.scalefl_client_update(
                     global_params, m, xi, yi, epochs=cfg.local_epochs,
-                    batch=cfg.batch_size, lr=cfg.lr, seed=upd_seed)
+                    batch=cfg.batch_size, lr=cfg.lr, seed=upd_seed,
+                    family=w.family)
             deltas.append(d_)
             idxs.append(m)
             weights.append(float(len(xi)))
@@ -231,12 +245,13 @@ def _run_once_reference(cfg: FLConfig, verbose=False, selector=None,
             if cfg.method == "drfl":
                 global_params = fl_server.aggregate_drfl(
                     global_params, deltas, idxs, weights,
-                    server_lr=cfg.server_lr)
+                    server_lr=cfg.server_lr, family=w.family)
             else:
                 global_params = fl_server.aggregate_sliced(
                     global_params, deltas, weights)
 
-        accs = fl_server.evaluate(global_params, x_val, y_val)
+        accs = fl_server.evaluate(global_params, x_val, y_val,
+                                  family=w.family)
         acc = float(np.mean(accs))
         e_now = fleet_total_remaining(fleet)
         reward = (w1 * (acc - prev_acc) - w2 * (e_prev - e_now)

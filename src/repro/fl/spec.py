@@ -1,0 +1,241 @@
+"""Typed ``SimulationSpec`` layer over the flat :class:`FLConfig`.
+
+``FLConfig`` is the stable flat compatibility surface — 30+ keyword
+arguments, validated nowhere, so a typo like ``selector="mral"`` or
+``engine_mode="asynch"`` used to fail deep inside a run (or worse, run the
+wrong arm silently).  ``SimulationSpec`` groups the same knobs into typed
+sub-specs with ``__post_init__`` validation:
+
+* :class:`ModelSpec`  — which :class:`repro.models.family.ModelFamily` to
+  train (``family="cnn"`` is the registered default; ``"mlp"`` is the
+  early-exit MLP), plus the local-training knobs (width, image size,
+  epochs, batch, lr).
+* :class:`EngineSpec` — round scheduling: sync/async mode, staleness decay,
+  async budgets, client-update executor.
+* :class:`MarlSpec`   — dual-selection strategy and QMIX training cadence.
+* :class:`EnergySpec` — battery scaling and hot-plug scenario.
+
+``from_flat`` / ``to_flat`` bridge the two representations bit-for-bit
+(`to_flat(from_flat(cfg)) == cfg` for every valid flat config), so every
+existing ``FLConfig(...)`` callsite keeps working unchanged —
+``run_simulation`` accepts either and validates both through this module.
+
+    from repro.fl import SimulationSpec, ModelSpec, run_simulation
+    spec = SimulationSpec(n_devices=64, n_rounds=10,
+                          model=ModelSpec(family="mlp"),
+                          marl=MarlSpec(selector="greedy"))
+    hist = run_simulation(spec)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.fl.simulation import FLConfig
+from repro.models.family import get_family, known_families
+
+METHODS = ("drfl", "heterofl", "scalefl")
+SELECTORS = ("marl", "greedy", "random", "static")
+ENGINE_MODES = ("sync", "async")
+CLIENT_EXECUTORS = ("auto", "perclient", "batched")
+
+
+def _check(cond, msg):
+    if not cond:
+        raise ValueError(msg)
+
+
+def _check_choice(value, choices, field):
+    _check(value in choices,
+           f"{field}={value!r} is not one of {', '.join(choices)}")
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """What each client trains: a registered model family + local knobs."""
+    family: str = "cnn"                 # repro.models.family registry key
+    width_mult: float = 0.25            # backbone slimming (CPU budget)
+    hw: int = 16                        # image size
+    num_classes: int = 10
+    local_epochs: int = 5               # paper §5
+    batch_size: int = 32                # paper §5
+    lr: float = 0.05                    # paper §5
+
+    def __post_init__(self):
+        _check_choice(self.family, known_families(), "model.family")
+        _check(self.width_mult > 0, "model.width_mult must be > 0")
+        _check(self.hw >= 1, "model.hw must be >= 1")
+        _check(self.num_classes >= 2, "model.num_classes must be >= 2")
+        _check(self.local_epochs >= 1, "model.local_epochs must be >= 1")
+        _check(self.batch_size >= 1, "model.batch_size must be >= 1")
+        _check(self.lr > 0, "model.lr must be > 0")
+
+
+@dataclasses.dataclass
+class EngineSpec:
+    """Round scheduling (repro.fl.engine) + client-update executor."""
+    mode: str = "sync"                  # sync | async
+    client_executor: str = "auto"       # auto | perclient | batched
+    staleness_decay: float = 0.5        # FedAsync (1+s)^-decay
+    async_eval_every: int = 1
+    async_time_horizon: float = 0.0     # sim-seconds (0 = task budget)
+    async_task_budget: int = 0          # client tasks (0 = sync-equivalent)
+
+    def __post_init__(self):
+        _check_choice(self.mode, ENGINE_MODES, "engine.mode")
+        _check_choice(self.client_executor, CLIENT_EXECUTORS,
+                      "engine.client_executor")
+        _check(self.staleness_decay >= 0,
+               "engine.staleness_decay must be >= 0")
+        _check(self.async_eval_every >= 1,
+               "engine.async_eval_every must be >= 1")
+        _check(self.async_time_horizon >= 0,
+               "engine.async_time_horizon must be >= 0")
+        _check(self.async_task_budget >= 0,
+               "engine.async_task_budget must be >= 0")
+
+
+@dataclasses.dataclass
+class MarlSpec:
+    """Dual-selection strategy + QMIX training cadence (paper §4.3)."""
+    selector: str = "marl"              # marl | greedy | random | static
+    reward_weights: Tuple[float, float, float] = (1000.0, 0.01, 1.0)
+    train_every: int = 2
+    updates_per_round: int = 2
+    episodes: int = 1                   # selector pre-training episodes
+
+    def __post_init__(self):
+        _check_choice(self.selector, SELECTORS, "marl.selector")
+        _check(len(tuple(self.reward_weights)) == 3,
+               "marl.reward_weights must have exactly 3 entries (w1,w2,w3)")
+        _check(self.train_every >= 1, "marl.train_every must be >= 1")
+        _check(self.updates_per_round >= 0,
+               "marl.updates_per_round must be >= 0")
+        _check(self.episodes >= 1, "marl.episodes must be >= 1")
+
+
+@dataclasses.dataclass
+class EnergySpec:
+    """Battery scaling + the paper's §4.2 hot-plug scenario."""
+    scale: float = 1.0                  # scales batteries to stress budgets
+    hotplug_round: int = 0
+    hotplug_n: int = 0
+
+    def __post_init__(self):
+        _check(self.scale > 0, "energy.scale must be > 0")
+        _check(self.hotplug_round >= 0,
+               "energy.hotplug_round must be >= 0")
+        _check(self.hotplug_n >= 0, "energy.hotplug_n must be >= 0")
+
+
+@dataclasses.dataclass
+class SimulationSpec:
+    """One cell of the paper's experiment grid, fully typed + validated."""
+    n_devices: int = 40
+    n_rounds: int = 30
+    participation: float = 0.10         # paper: 10% per round
+    method: str = "drfl"                # drfl | heterofl | scalefl
+    seed: int = 0
+    server_lr: float = 0.7
+    # data (synthetic CIFAR-like shards)
+    n_train: int = 4000
+    alpha: float = 0.5                  # Dirichlet non-IID
+    n_val_fraction: float = 0.04        # paper Table 2 optimum
+    noise: float = 1.0
+    # nested sub-specs
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
+    marl: MarlSpec = dataclasses.field(default_factory=MarlSpec)
+    energy: EnergySpec = dataclasses.field(default_factory=EnergySpec)
+
+    def __post_init__(self):
+        _check(self.n_devices >= 1, "n_devices must be >= 1")
+        _check(self.n_rounds >= 1, "n_rounds must be >= 1")
+        _check(0 < self.participation <= 1,
+               "participation must be in (0, 1]")
+        _check_choice(self.method, METHODS, "method")
+        _check(self.server_lr > 0, "server_lr must be > 0")
+        _check(self.n_train >= 1, "n_train must be >= 1")
+        _check(self.alpha > 0, "alpha must be > 0")
+        _check(0 < self.n_val_fraction < 1,
+               "n_val_fraction must be in (0, 1)")
+        _check(self.noise >= 0, "noise must be >= 0")
+        family = get_family(self.model.family)
+        _check(family.supports(self.method),
+               f"model family {family.name!r} does not support "
+               f"method {self.method!r} (supported: "
+               f"{', '.join(family.supported_methods)})")
+
+    # -- bridges ----------------------------------------------------------
+    @classmethod
+    def from_flat(cls, cfg: FLConfig) -> "SimulationSpec":
+        """Lift a flat :class:`FLConfig` into the typed spec (validating
+        it); ``to_flat`` inverts this bit-for-bit."""
+        return cls(
+            n_devices=cfg.n_devices, n_rounds=cfg.n_rounds,
+            participation=cfg.participation, method=cfg.method,
+            seed=cfg.seed, server_lr=cfg.server_lr, n_train=cfg.n_train,
+            alpha=cfg.alpha, n_val_fraction=cfg.n_val_fraction,
+            noise=cfg.noise,
+            model=ModelSpec(
+                family=cfg.model_family, width_mult=cfg.width_mult,
+                hw=cfg.hw, num_classes=cfg.num_classes,
+                local_epochs=cfg.local_epochs, batch_size=cfg.batch_size,
+                lr=cfg.lr),
+            engine=EngineSpec(
+                mode=cfg.engine_mode, client_executor=cfg.client_executor,
+                staleness_decay=cfg.staleness_decay,
+                async_eval_every=cfg.async_eval_every,
+                async_time_horizon=cfg.async_time_horizon,
+                async_task_budget=cfg.async_task_budget),
+            marl=MarlSpec(
+                selector=cfg.selector, reward_weights=cfg.reward_weights,
+                train_every=cfg.marl_train_every,
+                updates_per_round=cfg.marl_updates_per_round,
+                episodes=cfg.marl_episodes),
+            energy=EnergySpec(
+                scale=cfg.energy_scale, hotplug_round=cfg.hotplug_round,
+                hotplug_n=cfg.hotplug_n))
+
+    def to_flat(self) -> FLConfig:
+        """Lower to the flat compatibility surface consumed by the engine."""
+        return FLConfig(
+            n_devices=self.n_devices, n_rounds=self.n_rounds,
+            participation=self.participation,
+            local_epochs=self.model.local_epochs,
+            batch_size=self.model.batch_size, lr=self.model.lr,
+            alpha=self.alpha, num_classes=self.model.num_classes,
+            n_train=self.n_train, n_val_fraction=self.n_val_fraction,
+            noise=self.noise, hw=self.model.hw,
+            width_mult=self.model.width_mult, seed=self.seed,
+            model_family=self.model.family, method=self.method,
+            selector=self.marl.selector,
+            reward_weights=self.marl.reward_weights,
+            marl_train_every=self.marl.train_every,
+            marl_updates_per_round=self.marl.updates_per_round,
+            marl_episodes=self.marl.episodes,
+            hotplug_round=self.energy.hotplug_round,
+            hotplug_n=self.energy.hotplug_n,
+            energy_scale=self.energy.scale, server_lr=self.server_lr,
+            engine_mode=self.engine.mode,
+            staleness_decay=self.engine.staleness_decay,
+            async_eval_every=self.engine.async_eval_every,
+            async_time_horizon=self.engine.async_time_horizon,
+            async_task_budget=self.engine.async_task_budget,
+            client_executor=self.engine.client_executor)
+
+
+def ensure_flat_config(cfg) -> FLConfig:
+    """Accept a :class:`SimulationSpec` or :class:`FLConfig`, validate,
+    and return the flat config the engine runs on.
+
+    Flat configs round-trip through :meth:`SimulationSpec.from_flat` purely
+    for validation — the ORIGINAL object is returned, so the flat path
+    stays bit-for-bit (`==` and identity) what the caller built."""
+    if isinstance(cfg, SimulationSpec):
+        return cfg.to_flat()
+    if isinstance(cfg, FLConfig):
+        SimulationSpec.from_flat(cfg)      # validation only
+        return cfg
+    raise TypeError(f"expected SimulationSpec or FLConfig, got "
+                    f"{type(cfg).__name__}")

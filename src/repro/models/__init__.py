@@ -1,1 +1,4 @@
 from repro.models.api import Model, build, extra_inputs  # noqa: F401
+from repro.models.family import (ModelFamily, get_family,  # noqa: F401
+                                 known_families, register_family,
+                                 resolve_family)

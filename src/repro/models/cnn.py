@@ -219,3 +219,59 @@ def flops_per_sample(model_idx: int, image_hw: int = 32,
             cin = cout
     total += 2 * cin * max(16, cin // 2) * hw * hw
     return total
+
+
+# ---------------------------------------------------------------------------
+# ModelFamily adapter: the registered default family ("cnn")
+# ---------------------------------------------------------------------------
+
+
+from repro.models.family import LayerwiseFamily, register_family  # noqa: E402
+
+
+class CnnFamily(LayerwiseFamily):
+    """The paper's multi-exit ResNet-18 as a pluggable :class:`ModelFamily`.
+
+    The only family that supports all three FL methods: HeteroFL /
+    ScaleFL submodels are structural channel-prefix slices of the conv
+    tree (:mod:`repro.core.baselines`)."""
+
+    name = "cnn"
+    supported_methods = ("drfl", "heterofl", "scalefl")
+
+    def init(self, key, num_classes: int = 10, width_mult: float = 1.0,
+             hw: int = 32):
+        # parameters are image-size independent; ``hw`` only matters for
+        # the analytic FLOP model
+        return init(key, num_classes, width_mult=width_mult)
+
+    def num_submodels(self) -> int:
+        return num_submodels()
+
+    def apply_all_exits(self, params, x):
+        return apply_all_exits(params, x)
+
+    def flops_per_sample(self, model_idx: int, image_hw: int = 32,
+                         width_mult: float = 1.0) -> float:
+        return flops_per_sample(model_idx, image_hw, width_mult)
+
+    def submodel_params(self, method: str, global_params, model_idx: int):
+        from repro.core.baselines import (WIDTH_LEVELS, scalefl_submodel,
+                                          width_slice_cnn)
+        if method == "heterofl":
+            return width_slice_cnn(global_params, WIDTH_LEVELS[model_idx])
+        if method == "scalefl":
+            return scalefl_submodel(global_params, model_idx)
+        return super().submodel_params(method, global_params, model_idx)
+
+    def bucket_trace_context(self):
+        # vmapped lax.conv with per-client kernels = grouped conv, which
+        # XLA CPU runs ~10x off BLAS speed at paper widths; trace the
+        # batched convs as patches+einsum (batched GEMMs) instead
+        if jax.default_backend() == "cpu":
+            return conv_via_patches()
+        import contextlib
+        return contextlib.nullcontext()
+
+
+register_family(CnnFamily())

@@ -1,0 +1,150 @@
+"""Early-exit residual MLP — the second registered :class:`ModelFamily`.
+
+Proof that the FL stack (round engine, bucketed-vmap executor, stacked
+Pallas aggregation, energy accounting) is family-generic: a layer-wise
+model with the canonical ``{"stem", "stages", "exits"}`` layout whose
+blocks are built from :mod:`repro.models.layers` primitives (LayerNorm +
+GELU MLP residual blocks, dense exit heads) instead of convolutions.
+
+Submodel m = stem + stages[:m+1] + exit heads <= m, exactly the DR-FL
+depth-prefix contract; images are flattened at the stem, so the model is
+a per-sample GEMM stack — the bucketed executor vmaps it with no special
+trace context (unlike the CNN's patches-conv CPU workaround).
+
+Paper-scale calibration (``cost_model``): width 1.0 on 32x32x3 inputs.
+The default width is deliberately small — this family exists to exercise
+heterogeneity scenarios (Arouj et al.; Banerjee et al. run energy-aware FL
+over widely different client architectures), not to chase CNN accuracy.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.family import LayerwiseFamily, register_family
+from repro.models.layers import (dense_apply, dense_bias_init, gelu_mlp_apply,
+                                 gelu_mlp_init, layernorm_apply,
+                                 layernorm_init)
+
+N_STAGES = 4
+BLOCKS_PER_STAGE = 2
+BASE_WIDTH = 256          # d_model at width_mult=1.0
+MLP_RATIO = 2             # hidden = MLP_RATIO * d
+
+
+def _width(width_mult: float) -> int:
+    return max(16, int(BASE_WIDTH * width_mult))
+
+
+def init(key, num_classes: int = 10, width_mult: float = 1.0, hw: int = 32,
+         in_channels: int = 3):
+    """Canonical layer-wise tree: stem (flatten + project + LN), N_STAGES
+    stages of residual GELU-MLP blocks, one LN + linear exit per stage."""
+    d = _width(width_mult)
+    f = MLP_RATIO * d
+    in_dim = hw * hw * in_channels
+    ks = jax.random.split(key, 1 + N_STAGES * (BLOCKS_PER_STAGE + 1))
+    it = iter(ks)
+    params = {
+        "stem": {"proj": dense_bias_init(next(it), in_dim, d, jnp.float32),
+                 "ln": layernorm_init(d, jnp.float32)},
+        "stages": [],
+        "exits": [],
+    }
+    for _ in range(N_STAGES):
+        blocks = []
+        for _ in range(BLOCKS_PER_STAGE):
+            bk = next(it)
+            blocks.append({"ln": layernorm_init(d, jnp.float32),
+                           "mlp": gelu_mlp_init(bk, d, f, jnp.float32)})
+        params["stages"].append(blocks)
+        ek = next(it)
+        params["exits"].append({
+            "ln": layernorm_init(d, jnp.float32),
+            "head": dense_bias_init(ek, d, num_classes, jnp.float32,
+                                    scale=1.0 / math.sqrt(d)),
+        })
+    return params
+
+
+def num_submodels() -> int:
+    return N_STAGES
+
+
+def _stem(params, x):
+    h = x.reshape(x.shape[0], -1)
+    h = dense_apply(params["stem"]["proj"], h)
+    return layernorm_apply(params["stem"]["ln"], h)
+
+
+def _block(bp, h):
+    return h + gelu_mlp_apply(bp["mlp"], layernorm_apply(bp["ln"], h))
+
+
+def _exit_head(ep, h):
+    return dense_apply(ep["head"], layernorm_apply(ep["ln"], h))
+
+
+def apply(params, x, model_idx: int):
+    """x: [B, H, W, C] -> logits at exit ``model_idx``."""
+    h = _stem(params, x)
+    for si in range(model_idx + 1):
+        for bp in params["stages"][si]:
+            h = _block(bp, h)
+    return _exit_head(params["exits"][model_idx], h)
+
+
+def apply_all_exits(params, x) -> List[jnp.ndarray]:
+    """Logits from every exit held by ``params`` (truncated trees ok)."""
+    h = _stem(params, x)
+    outs = []
+    for si in range(len(params["stages"])):
+        for bp in params["stages"][si]:
+            h = _block(bp, h)
+        outs.append(_exit_head(params["exits"][si], h))
+    return outs
+
+
+def flops_per_sample(model_idx: int, image_hw: int = 32,
+                     width_mult: float = 1.0,
+                     in_channels: int = 3, num_classes: int = 10) -> float:
+    """Analytic forward FLOPs for Model_{idx+1} (energy-model input)."""
+    d = _width(width_mult)
+    f = MLP_RATIO * d
+    total = 2.0 * image_hw * image_hw * in_channels * d          # stem proj
+    per_block = 2.0 * (d * f + f * d)                            # in + out
+    total += (model_idx + 1) * BLOCKS_PER_STAGE * per_block
+    total += 2.0 * d * num_classes                               # exit head
+    return total
+
+
+class MlpFamily(LayerwiseFamily):
+    """Early-exit MLP as a pluggable family (``model_family="mlp"``).
+
+    DR-FL (depth-prefix) only: width slicing dense residual blocks is a
+    different baseline design, so HeteroFL/ScaleFL stay CNN-territory and
+    :class:`repro.fl.spec.SimulationSpec` rejects the combination up
+    front."""
+
+    name = "mlp"
+    supported_methods = ("drfl",)
+
+    def init(self, key, num_classes: int = 10, width_mult: float = 1.0,
+             hw: int = 32):
+        return init(key, num_classes, width_mult=width_mult, hw=hw)
+
+    def num_submodels(self) -> int:
+        return num_submodels()
+
+    def apply_all_exits(self, params, x):
+        return apply_all_exits(params, x)
+
+    def flops_per_sample(self, model_idx: int, image_hw: int = 32,
+                         width_mult: float = 1.0) -> float:
+        return flops_per_sample(model_idx, image_hw, width_mult)
+
+
+register_family(MlpFamily())

@@ -54,6 +54,27 @@ def test_aggregate_sliced_partial_coverage():
     np.testing.assert_allclose(w_new[..., cov:], w_old[..., cov:])
 
 
+def test_aggregate_sliced_aliased_leaves_stay_independent():
+    """Regression (ISSUE 4): the contribution table used to be keyed by
+    ``id(leaf)``, so two tree positions sharing one array object collided —
+    contributions to one path leaked into the other and merged.  Path-keyed
+    collection must keep aliased leaves independent."""
+    shared = jnp.zeros((4,))                      # ONE object, TWO paths
+    gp = {"a": shared, "b": shared, "c": jnp.zeros((4,))}
+    # client 1 trains only "a"; client 2 trains "a" and "b" differently
+    d1 = {"a": jnp.ones((4,))}
+    d2 = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 5.0}
+    out = fl_server.aggregate_sliced(gp, [d1, d2], [1.0, 1.0])
+    # "a" = mean(1, 3) = 2; "b" covered only by client 2 -> 5; "c" untouched
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]), 5.0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out["c"]), 0.0)
+    # a path no client covered keeps the ORIGINAL leaf even when aliased
+    out2 = fl_server.aggregate_sliced(gp, [d1], [2.0])
+    np.testing.assert_allclose(np.asarray(out2["a"]), 1.0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out2["b"]), 0.0)
+
+
 def test_aggregate_drfl_untrained_exits_unchanged():
     p = _params()
     delta = jax.tree.map(jnp.ones_like, p)
