@@ -15,8 +15,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (async_bench, fig5_energy, fig6_scalability,
-                            fleet_bench, kernels_bench, roofline,
-                            table1_accuracy, table2_valratio)
+                            fleet_bench, fleet_shard_bench, kernels_bench,
+                            roofline, table1_accuracy, table2_valratio)
     print("name,us_per_call,derived")
     suites = [
         ("table1", table1_accuracy.main),
@@ -26,6 +26,11 @@ def main() -> None:
         ("async", async_bench.main),
         ("kernels", kernels_bench.main),
         ("fleet", fleet_bench.main),
+        # smoke only here (and a 1-device mesh unless XLA_FLAGS forced a
+        # virtual multi-device runtime before this process started); the
+        # recorded full-scale rows come from running the module directly
+        ("fleet_shard", lambda: fleet_shard_bench.main(
+            ["--smoke", "--no-write"])),
         ("roofline", roofline.main),
     ]
     failures = 0

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Docs CI check: internal links resolve, code snippets parse and import.
+
+Walks README.md plus everything under docs/, and for each markdown file:
+
+* every relative markdown link ``[text](path)`` (and ``path#anchor``) must
+  point at an existing file or directory in the repo — external
+  (``http(s)://``) and in-page (``#...``) links are skipped;
+* every fenced ```` ```python ```` / ```` ```bash ```` snippet must at
+  least be syntactically valid (``compile()`` for python; bash blocks are
+  only checked for balanced fences);
+* every ``import repro...`` / ``from repro... import`` statement appearing
+  in python snippets must actually import (catches docs drifting from the
+  public API).
+
+Exit code 0 = clean; nonzero prints every failure.  Run from anywhere:
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
+IMPORT_RE = re.compile(r"^\s*(?:from\s+(repro[\w.]*)\s+import|"
+                       r"import\s+(repro[\w.]*))", re.M)
+
+
+def doc_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                files.append(os.path.join(docs, name))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_links(path: str, text: str, errors: list):
+    base = os.path.dirname(path)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, REPO)}: broken link "
+                          f"-> {target}")
+
+
+def check_snippets(path: str, text: str, errors: list):
+    rel = os.path.relpath(path, REPO)
+    for m in FENCE_RE.finditer(text):
+        lang, body = m.group(1), m.group(2)
+        if lang != "python":
+            continue
+        try:
+            compile(body, f"<{rel} snippet>", "exec")
+        except SyntaxError as e:
+            errors.append(f"{rel}: python snippet does not parse: {e}")
+            continue
+        for im in IMPORT_RE.finditer(body):
+            module = im.group(1) or im.group(2)
+            try:
+                __import__(module)
+            except Exception as e:
+                errors.append(f"{rel}: snippet import {module!r} fails: "
+                              f"{type(e).__name__}: {e}")
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    errors: list = []
+    files = doc_files()
+    for path in files:
+        with open(path) as fh:
+            text = fh.read()
+        check_links(path, text, errors)
+        check_snippets(path, text, errors)
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"checked {len(files)} docs: "
+          f"{'OK' if not errors else f'{len(errors)} problem(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,27 @@
-"""DR-FL core: the paper's contribution.
+"""DR-FL core: the paper's contribution, model-family- and scale-agnostic.
 
 * layerwise    — depth-prefix submodels + masks (§4.2)
-* aggregation  — FedAvg + layer-aligned masked aggregation (Step 2)
+* aggregation  — FedAvg + layer-aligned masked aggregation (Step 2), incl.
+                 the stacked segment-row path behind the Pallas layer_agg
+                 kernel; layout-generic via ``repro.models.family`` stack
+                 templates (no concrete architecture imported here)
 * energy       — Eq. 3–7 time/energy system model + device fleet (scalar
                  reference semantics)
 * fleet        — vectorized struct-of-arrays FleetState engine (batched
-                 Eq. 3–7 kernels; numpy parity + jax/jit backends)
-* selection    — dual-selection strategies (MARL / greedy / random / static)
+                 Eq. 3–7 kernels; numpy parity + jax/jit backends; shards
+                 over a ``jax.sharding`` "fleet" mesh via
+                 ``repro.sharding.fleet``) + the fixed-width
+                 ``fleet_summary`` factored MARL state
+* selection    — dual-selection strategies (MARL / greedy / random /
+                 static), consumed by the event-driven round engine in
+                 ``repro.fl.engine`` (sync barrier and async timeline
+                 modes); flat and factored QMIX state modes
 * marl         — QMIX learner (agents, mixer, replay, TD updates)
 * baselines    — HeteroFL / ScaleFL comparison arms
+
+Model-specific machinery (masks per family, client updates, cost models)
+lives behind the ``repro.models.family.ModelFamily`` registry; round
+scheduling lives in ``repro.fl.engine.RoundEngine``.
 """
 from repro.core.aggregation import fedavg, fl_allreduce, layerwise_aggregate  # noqa: F401
 from repro.core.energy import (BATTERY_JOULES, DeviceProfile, DeviceState,  # noqa: F401
@@ -17,9 +30,12 @@ from repro.core.fleet import (FleetState, as_fleet_state,  # noqa: F401
                               fleet_affordability, fleet_charge,
                               fleet_connect, fleet_cost_matrix,
                               fleet_disconnect, fleet_round_cost,
+                              fleet_summary, fleet_topk_mask,
                               fleet_total_remaining, make_fleet_state,
-                              set_modes)
+                              sample_fleet_state, set_modes, summary_width)
 from repro.core.layerwise import (exit_points, layer_mask, num_submodels,  # noqa: F401
                                   stacked_update_mask, submodel_fraction)
 from repro.core.selection import (GreedySelector, MarlSelector,  # noqa: F401
-                                  RandomSelector, Selection, StaticTierSelector)
+                                  RandomSelector, Selection,
+                                  StaticTierSelector, marl_state_dim,
+                                  resolve_state_mode)

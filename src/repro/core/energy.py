@@ -131,8 +131,9 @@ def make_fleet(n: int, seed: int = 0,
 # 562) so `from repro.core.energy import FleetState` works without a
 # circular import (fleet.py imports this module at its top).
 _FLEET_EXPORTS = ("FleetState", "as_fleet_state", "make_fleet_state",
-                  "fleet_round_cost", "fleet_cost_matrix",
-                  "fleet_affordability", "fleet_charge",
+                  "sample_fleet_state", "fleet_round_cost",
+                  "fleet_cost_matrix", "fleet_affordability", "fleet_charge",
+                  "fleet_topk_mask", "fleet_summary", "summary_width",
                   "fleet_total_remaining", "fleet_connect",
                   "fleet_disconnect", "fleet_idle", "fleet_set_busy",
                   "set_modes")

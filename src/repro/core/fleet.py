@@ -5,7 +5,8 @@
 state as a struct of arrays and evaluates the paper's Eq. 3–7 fleet-wide in
 a handful of batched array ops, so per-round selection + energy accounting
 is O(1) kernel dispatches instead of O(n) Python loops (the RQ3/Fig. 6
-scalability path: 256+ device fleets).
+scalability path: 256+ device fleets; with :mod:`repro.sharding.fleet`
+the same kernels run data-parallel over a multi-device ``"fleet"`` mesh).
 
 Two interchangeable backends share the same code (the kernels are written
 against the array API common to numpy and jnp):
@@ -25,6 +26,37 @@ the scalar ``round_cost`` (and so selectors are priced with the full round
 configuration), but — exactly like the scalar reference — the paper's
 Eq. 5 cost model is batch-size-independent (samples = L_n * epochs), so it
 does not enter any expression.
+
+Public surface (one-line contracts):
+
+* :class:`FleetState` — registered-pytree struct of ``[n]`` arrays; the
+  fleet state every kernel takes and returns.
+* :func:`as_fleet_state` — normalise selector input (FleetState passes
+  through, DeviceState sequences get the bit-exact numpy view).
+* :func:`make_fleet_state` — SoA twin of ``energy.make_fleet`` (identical
+  sampled profiles for a given seed).
+* :func:`sample_fleet_state` — vectorized large-fleet constructor (same
+  tier distributions, no per-device Python objects; the 1M-device path).
+* :func:`fleet_round_cost` / :func:`fleet_cost_matrix` — batched Eq. 5/7
+  (time, energy) per device (× submodel for the matrix form).
+* :func:`fleet_affordability` — ``[n, M+1]`` bool action mask (abstain
+  always legal, dead devices can only abstain).
+* :func:`fleet_charge` — deduct round energy, kill over-committed devices;
+  returns ``(new_fleet, ok[n])``.
+* :func:`fleet_topk_mask` — jit/shard-friendly bool mask of the top-k
+  scores (the Top-K participant cut, §4.3.3).
+* :func:`fleet_summary` — fixed-width, permutation-invariant global
+  summary of the fleet (histograms + totals); the factored QMIX state.
+* :func:`summary_width` — its width: ``2 * n_bins + n_models + 5``,
+  independent of ``n_devices``.
+* :func:`fleet_total_remaining` — Eq. 6 fleet energy ledger (host float).
+* :func:`fleet_connect` / :func:`fleet_disconnect` — hot-plug joins and
+  not-yet-connected masking (paper §4.2 Step 1).
+* :func:`fleet_idle` / :func:`fleet_set_busy` — per-device virtual clocks
+  for the async engine.
+* :func:`set_modes` — apply eco/normal/turbo power modes fleet-wide.
+* ``*_jit`` variants — the same kernels under ``jax.jit`` for the jax
+  backend (sharded inputs stay sharded; reductions become all-reduces).
 """
 from __future__ import annotations
 
@@ -74,7 +106,10 @@ class FleetState:
     modes: Tuple[str, ...] = ()
 
     def __post_init__(self):
-        if self.busy_until is None:
+        # `remaining is None` happens when jax unflattens internal proxy
+        # trees (device_put/tree_map with placeholder leaves) — leave the
+        # placeholder structure alone in that case
+        if self.busy_until is None and self.remaining is not None:
             xp = jnp if isinstance(self.remaining, jax.Array) else np
             self.busy_until = xp.zeros(np.shape(self.remaining),
                                        self.remaining.dtype)
@@ -166,6 +201,46 @@ def make_fleet_state(n: int, seed: int = 0, tier_probs=(0.4, 0.3, 0.3),
     so the sampled profiles are identical for a given seed."""
     return FleetState.from_devices(
         make_fleet(n, seed, tier_probs, data_sizes), backend=backend)
+
+
+def sample_fleet_state(n: int, seed: int = 0, tier_probs=(0.4, 0.3, 0.3),
+                       data_sizes: Optional[List[int]] = None,
+                       backend: str = "jax") -> FleetState:
+    """Vectorized large-fleet constructor (the 65k/1M-device path).
+
+    Samples the same tier mix, per-tier jitter and data-size ranges as
+    :func:`repro.core.energy.make_fleet`, but with batched numpy draws —
+    no per-device ``DeviceState`` objects, so building a 1M-device fleet
+    takes milliseconds instead of minutes.  NOT bit-identical to
+    ``make_fleet`` for a given seed (different RNG call order); use
+    :func:`make_fleet_state` where the scalar-reference parity contract
+    matters."""
+    rng = np.random.default_rng(seed)
+    tier_names = list(DEVICE_TIERS)
+    tiers = rng.choice(len(tier_names), size=n, p=list(tier_probs))
+    base = np.asarray([DEVICE_TIERS[t] for t in tier_names], np.float64)
+    jitter = rng.uniform(0.85, 1.15, size=(n, 3))
+    c, pt, pc = (base[tiers] * jitter).T
+    if data_sizes is not None:
+        ds = np.asarray(data_sizes, np.int64)
+    else:
+        ds = rng.integers(200, 1200, size=n)
+    battery = np.full(n, BATTERY_JOULES)
+
+    def arr(a, dtype):
+        a = np.asarray(a, dtype)
+        return jnp.asarray(a) if backend == "jax" else a
+
+    return FleetState(
+        compute=arr(c, np.float64), p_train=arr(pt, np.float64),
+        p_com=arr(pc, np.float64),
+        bandwidth=arr(np.full(n, 2.5e6), np.float64),
+        battery=arr(battery, np.float64), remaining=arr(battery, np.float64),
+        data_size=arr(ds, np.int64),
+        mode_compute=arr(np.ones(n), np.float64),
+        mode_power=arr(np.ones(n), np.float64),
+        alive=arr(np.ones(n, bool), bool),
+        tiers=(), modes=())
 
 
 # ---------------------------------------------------------------------------
@@ -294,9 +369,122 @@ def set_modes(fleet: FleetState, modes: Sequence[str]) -> FleetState:
         modes=tuple(modes))
 
 
+# ---------------------------------------------------------------------------
+# Top-K participant cut + factored global summary (the QMIX factored state)
+# ---------------------------------------------------------------------------
+
+
+def fleet_topk_mask(scores: Array, k: int) -> Array:
+    """[n] bool mask selecting the k highest ``scores``.
+
+    jit/shard-friendly (``jax.lax.top_k`` on the jax backend — under a
+    sharded fleet GSPMD lowers it to per-shard top-k + a small cross-shard
+    merge, never a full-fleet gather).  ``-inf`` scores are never selected
+    even when fewer than k finite candidates exist.  Ties break toward the
+    lower device index (matching ``np.argsort(kind="stable")`` on negated
+    scores, the host-side selector convention)."""
+    n = int(np.shape(scores)[0])
+    k = max(0, min(int(k), n))
+    if k == 0:
+        xp = jnp if isinstance(scores, jax.Array) else np
+        return xp.zeros(n, bool)
+    if isinstance(scores, jax.Array):
+        _, idx = jax.lax.top_k(scores, k)           # stable: low index wins ties
+        mask = jnp.zeros(n, bool).at[idx].set(True)
+        return mask & jnp.isfinite(scores)
+    idx = np.argsort(-np.asarray(scores), kind="stable")[:k]
+    mask = np.zeros(n, bool)
+    mask[idx] = True
+    return mask & np.isfinite(scores)
+
+
+#: histogram resolution of the factored summary (per-feature bin count)
+SUMMARY_BINS = 8
+#: width of the non-histogram tail of the summary vector
+_SUMMARY_TOTALS = 5
+
+
+def summary_width(n_models: int, n_bins: int = SUMMARY_BINS) -> int:
+    """Width of :func:`fleet_summary`'s output: battery + capability
+    histograms (``n_bins`` each), per-submodel affordability fractions
+    (``n_models``), and 5 fleet totals — independent of ``n_devices``."""
+    return 2 * n_bins + int(n_models) + _SUMMARY_TOTALS
+
+
+def _histogram(values: Array, weights: Array, lo: float, hi: float,
+               n_bins: int, xp) -> Array:
+    """Weighted histogram of ``values`` over ``n_bins`` equal bins spanning
+    [lo, hi), as a one-hot segment-reduction: ``[n, n_bins]`` one-hot ×
+    weights, summed over the fleet axis.  Under a sharded fleet this is one
+    ``[n_bins]``-sized all-reduce — the whole point of the factored state:
+    no gather of per-device rows ever happens."""
+    idx = xp.clip(((values - lo) / (hi - lo) * n_bins).astype(jnp.int32
+                                                             if xp is jnp
+                                                             else np.int64),
+                  0, n_bins - 1)
+    onehot = idx[:, None] == xp.arange(n_bins)[None, :]
+    return (onehot * weights[:, None]).sum(axis=0)
+
+
+def fleet_summary(fleet: FleetState, model_sizes, model_fractions,
+                  round_idx=0, n_rounds: int = 1, local_epochs: int = 5,
+                  batch_size: int = 32, n_bins: int = SUMMARY_BINS,
+                  afford: Optional[Array] = None) -> Array:
+    """Fixed-width, permutation-invariant global fleet summary — the
+    factored QMIX mixer state (``state_mode="factored"``).
+
+    Replaces the flat ``n_devices * OBS_DIM`` observation concatenation
+    with ``summary_width(len(model_sizes), n_bins)`` features whose width
+    is independent of fleet size:
+
+    * battery histogram — alive-mass per ``remaining/battery`` bin, as a
+      fraction of the fleet;
+    * capability histogram — alive-mass per effective-compute bin (same
+      ``/500`` normalisation as the per-agent observation, Eq. 9);
+    * affordability fractions — per submodel m, the fraction of the fleet
+      that could pay for m this round (the global view of the paper's
+      §4.2 Step 3 energy constraint, priced per the family's cost model);
+    * totals — remaining/battery energy ratio (Eq. 6), alive fraction,
+      mean battery fraction and mean data size over alive devices, and
+      the round-phase feature ``t / n_rounds``.
+
+    Every feature is a sum/mean over the fleet axis, so the summary is
+    permutation-invariant over device order and, on a sharded fleet, costs
+    one small all-reduce instead of a full-fleet gather.
+
+    ``afford`` accepts a precomputed ``[n, M+1]`` affordability mask so a
+    caller that already built the MARL action mask (the selector hot path)
+    does not pay the dominant O(n*M) cost kernel twice."""
+    xp = _xp(fleet)
+    n = len(fleet)
+    alive = fleet.alive.astype(fleet.remaining.dtype)
+    n_alive = xp.maximum(alive.sum(), 1.0)
+    inv_n = 1.0 / float(n)
+    batt_frac = fleet.remaining / fleet.battery
+    hist_b = _histogram(batt_frac, alive, 0.0, 1.0 + 1e-9, n_bins, xp) * inv_n
+    eff = fleet.compute * fleet.mode_compute / 500.0
+    hist_c = _histogram(eff, alive, 0.0, 2.0, n_bins, xp) * inv_n
+    if afford is None:
+        afford = fleet_affordability(fleet, model_sizes, model_fractions,
+                                     local_epochs, batch_size)
+    afford_frac = afford[:, :-1].astype(batt_frac.dtype).sum(axis=0) * inv_n
+    t = xp.asarray(round_idx, batt_frac.dtype) / max(int(n_rounds), 1)
+    totals = xp.stack([
+        fleet.remaining.sum() / fleet.battery.sum(),
+        alive.sum() * inv_n,
+        (batt_frac * alive).sum() / n_alive,
+        (fleet.data_size * alive).sum() / n_alive / 1000.0,
+        t,
+    ])
+    out = xp.concatenate([hist_b, hist_c, afford_frac, totals])
+    return out.astype(jnp.float32 if xp is jnp else np.float32)
+
+
 # Jitted entry points for the jax backend.  local_epochs/batch_size trace as
 # scalars; model_sizes/model_fractions as float tuples (leaves).  FleetState
 # flows through as a pytree.
 fleet_cost_matrix_jit = jax.jit(fleet_cost_matrix)
 fleet_affordability_jit = jax.jit(fleet_affordability)
 fleet_charge_jit = jax.jit(fleet_charge)
+fleet_summary_jit = jax.jit(fleet_summary,
+                            static_argnames=("n_rounds", "n_bins"))

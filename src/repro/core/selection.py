@@ -16,6 +16,24 @@ bit-for-bit, so legacy callers see identical decisions.
 ``local_epochs``/``batch_size`` are threaded through ``select`` so the
 affordability mask prices exactly the round the simulation will charge
 (defaults match the paper's §5 values).
+
+The QMIX mixer's global state has two modes (``MarlSelector(state_mode=)``):
+
+* ``"flat"`` — the per-agent observations concatenated, ``n_devices *
+  OBS_DIM`` wide: the original formulation, kept bit-for-bit (the parity
+  contract enforced by ``tests/test_factored_state.py``) but linear in
+  fleet size in both mixer parameters and replay-buffer memory;
+* ``"factored"`` — :func:`repro.core.fleet.fleet_summary`: a fixed-width,
+  permutation-invariant fleet summary (battery/capability histograms,
+  per-submodel affordability fractions from the model family's cost
+  model, energy totals, round phase) whose width is INDEPENDENT of
+  ``n_devices`` — the 4096+/1M-device scaling path (compact global
+  summaries rather than per-client concatenation, after Zhang et al.,
+  arXiv:2201.02932).
+
+``resolve_state_mode`` maps the config-level ``"auto"`` to flat at or
+below :data:`FACTORED_AUTO_N` devices (small fleets keep the legacy
+trajectory bit-for-bit) and factored at scale.
 """
 from __future__ import annotations
 
@@ -28,8 +46,10 @@ import numpy as np
 
 from repro.core.energy import DeviceState
 from repro.core.fleet import (FleetState, as_fleet_state, fleet_affordability,
-                              fleet_affordability_jit, fleet_cost_matrix,
-                              fleet_cost_matrix_jit, fleet_is_jax)
+                              fleet_affordability_jit, fleet_charge,
+                              fleet_cost_matrix, fleet_cost_matrix_jit,
+                              fleet_is_jax, fleet_summary, fleet_topk_mask,
+                              summary_width)
 from repro.core.marl.qmix import QmixConfig, QmixLearner, epsilon
 
 
@@ -90,6 +110,36 @@ def obs_vector(dev: DeviceState, round_idx: int, n_rounds: int) -> np.ndarray:
 
 OBS_DIM = 5
 
+#: largest fleet for which ``state_mode="auto"`` keeps the flat QMIX global
+#: state; strictly above this the factored summary takes over (the boundary
+#: is inclusive so documented <= 256-device workflows — e.g. the Fig. 6
+#: 64/256 rows — keep their legacy bit-for-bit trajectories)
+FACTORED_AUTO_N = 256
+
+STATE_MODES = ("flat", "factored")
+
+
+def resolve_state_mode(state_mode: str, n_agents: int) -> str:
+    """Map a config-level state mode to a concrete one: ``"auto"`` keeps
+    the bit-for-bit flat state at or below :data:`FACTORED_AUTO_N` agents
+    and switches to the fixed-width factored summary above."""
+    if state_mode == "auto":
+        return "factored" if n_agents > FACTORED_AUTO_N else "flat"
+    if state_mode in STATE_MODES:
+        return state_mode
+    raise ValueError(f"unknown state_mode {state_mode!r} "
+                     f"(expected 'auto', 'flat' or 'factored')")
+
+
+def marl_state_dim(state_mode: str, n_agents: int, n_models: int) -> int:
+    """QMIX mixer ``state_dim`` for a concrete state mode — ``n_agents *
+    OBS_DIM`` flat, :func:`repro.core.fleet.summary_width` (independent of
+    ``n_agents``) factored."""
+    mode = resolve_state_mode(state_mode, n_agents)
+    if mode == "factored":
+        return summary_width(n_models)
+    return n_agents * OBS_DIM
+
 
 def fleet_obs(fleet: FleetState, round_idx: int, n_rounds: int) -> np.ndarray:
     """[n, OBS_DIM] float32 — vectorized :func:`obs_vector` over the fleet."""
@@ -105,23 +155,34 @@ def fleet_obs(fleet: FleetState, round_idx: int, n_rounds: int) -> np.ndarray:
 
 
 class MarlSelector(SelectorBase):
-    """The paper's MARL-based dual-selection (QMIX, Fig. 3)."""
+    """The paper's MARL-based dual-selection (QMIX, Fig. 3).
+
+    ``state_mode="flat"`` (default) keeps the original ``n_devices *
+    OBS_DIM`` mixer state bit-for-bit; ``"factored"`` swaps in the
+    fixed-width :func:`repro.core.fleet.fleet_summary`, making
+    ``learner.cfg.state_dim`` independent of fleet size (``"auto"``
+    resolves by :func:`resolve_state_mode`).
+    """
 
     name = "marl"
 
     def __init__(self, n_devices: int, n_models: int, n_rounds: int,
-                 seed: int = 0):
+                 seed: int = 0, state_mode: str = "flat"):
         self.n_models = n_models
         self.n_rounds = n_rounds
+        self.state_mode = resolve_state_mode(state_mode, n_devices)
         cfg = QmixConfig(
             n_agents=n_devices, obs_dim=OBS_DIM, num_actions=n_models + 1,
-            state_dim=n_devices * OBS_DIM,
+            state_dim=marl_state_dim(self.state_mode, n_devices, n_models),
             eps_decay_rounds=max(10, n_rounds // 2))
         self.learner = QmixLearner(cfg, jax.random.PRNGKey(seed))
         self.key = jax.random.PRNGKey(seed + 1)
         self.hidden = self.learner.init_hidden()
         self.total_rounds = 0   # epsilon decays on TOTAL experience (across
                                 # pre-training episodes), not per-episode
+        # last round-pricing seen by select(); episode_arrays uses it to
+        # price the terminal factored summary consistently
+        self._last_pricing = None
         # episode trace for the replay buffer
         self.ep_obs: List[np.ndarray] = []
         self.ep_state: List[np.ndarray] = []
@@ -133,11 +194,23 @@ class MarlSelector(SelectorBase):
         self.ep_obs, self.ep_state = [], []
         self.ep_actions, self.ep_rewards = [], []
 
+    def _state(self, fleet, obs, round_idx, model_sizes, model_fractions,
+               local_epochs, batch_size, avail=None) -> np.ndarray:
+        if self.state_mode == "factored":
+            from repro.core.fleet import fleet_summary_jit
+            fn = fleet_summary_jit if fleet_is_jax(fleet) else fleet_summary
+            return np.asarray(fn(
+                fleet, tuple(model_sizes), tuple(model_fractions), round_idx,
+                self.n_rounds, local_epochs, batch_size,
+                afford=avail), np.float32)
+        return obs.reshape(-1)
+
     def select(self, devices, round_idx, k, model_sizes, model_fractions,
                local_epochs=5, batch_size=32):
         fleet = as_fleet_state(devices)
         obs = fleet_obs(fleet, round_idx, self.n_rounds)
-        state = obs.reshape(-1)
+        self._last_pricing = (tuple(model_sizes), tuple(model_fractions),
+                              local_epochs, batch_size)
         self.key, sub = jax.random.split(self.key)
         eps = epsilon(self.learner.cfg, self.total_rounds)
         self.total_rounds += 1
@@ -148,6 +221,11 @@ class MarlSelector(SelectorBase):
                else fleet_affordability)
         avail = np.asarray(aff(
             fleet, model_sizes, model_fractions, local_epochs, batch_size))
+        # factored mode reuses the mask — the dominant O(n*M) cost kernel
+        # runs once per select, not once for the mask and once in the summary
+        state = self._state(fleet, obs, round_idx, model_sizes,
+                            model_fractions, local_epochs, batch_size,
+                            avail=avail)
         actions, qv, self.hidden = self.learner.act(
             jnp.asarray(obs), self.hidden, sub, eps, jnp.asarray(avail))
         qv = np.array(qv)
@@ -174,9 +252,22 @@ class MarlSelector(SelectorBase):
         self.ep_rewards.append(float(reward))
 
     def episode_arrays(self, final_devices, round_idx):
-        obs = np.stack(self.ep_obs + [fleet_obs(
-            as_fleet_state(final_devices), round_idx, self.n_rounds)])
-        state = obs.reshape(obs.shape[0], -1)
+        fleet = as_fleet_state(final_devices)
+        final_obs = fleet_obs(fleet, round_idx, self.n_rounds)
+        obs = np.stack(self.ep_obs + [final_obs])
+        if self.state_mode == "factored":
+            if self._last_pricing is None:
+                # both modes reject zero-step episodes (flat fails in the
+                # np.stack below); fail with the clearer message here
+                raise ValueError("episode_arrays() before any select(): "
+                                 "no round pricing to build the terminal "
+                                 "factored summary from")
+            sizes, fracs, epochs, batch = self._last_pricing
+            final_state = self._state(fleet, final_obs, round_idx, sizes,
+                                      fracs, epochs, batch)
+            state = np.stack(self.ep_state + [final_state])
+        else:
+            state = obs.reshape(obs.shape[0], -1)
         return (obs, state, np.stack(self.ep_actions),
                 np.asarray(self.ep_rewards, np.float32))
 
@@ -229,6 +320,74 @@ class RandomSelector(SelectorBase):
         for i in chosen:
             model_choice[i] = int(self.rng.integers(0, len(model_sizes)))
         return Selection(participants=chosen, model_choice=model_choice)
+
+
+def fleet_obs_batch(fleet: FleetState, round_idx, n_rounds: int):
+    """Backend-generic (jit/shard-friendly) twin of :func:`fleet_obs` —
+    jnp on the jax backend, so the observation matrix is computed where the
+    fleet lives instead of gathering to the host.  :func:`fleet_obs` stays
+    the numpy float64 parity reference."""
+    xp = jnp if fleet_is_jax(fleet) else np
+    dt = fleet.remaining.dtype
+    t = xp.asarray(round_idx, dt) / max(int(n_rounds), 1)
+    cols = xp.stack([
+        fleet.data_size.astype(dt) / 1000.0,
+        fleet.compute * fleet.mode_compute / 500.0,
+        fleet.remaining / fleet.battery,
+        xp.full((len(fleet),), t, dt),
+        fleet.alive.astype(dt),
+    ], axis=1)
+    return cols.astype(jnp.float32 if xp is jnp else np.float32)
+
+
+def dual_selection_energy_step(agent_params, hidden, fleet: FleetState,
+                               model_sizes, model_fractions, k: int,
+                               round_idx=0, n_rounds: int = 1,
+                               local_epochs: int = 5, batch_size: int = 32):
+    """One greedy (evaluation-mode) MARL dual-selection + energy step as a
+    SINGLE jittable program — the data-parallel hot path for sharded
+    fleets (``benchmarks/fleet_shard_bench.py``).
+
+    obs → shared-weight agent Q (vmapped over the fleet axis) →
+    affordability-masked argmax actions → Top-K participant cut over
+    chosen Qs → Eq. 5/7 energy charge → factored summary.  Every stage is
+    elementwise or a small reduction over the ``[n]`` axis, so under a
+    :func:`repro.sharding.fleet.shard_fleet` placement the whole step runs
+    data-parallel with one ``summary_width``-sized all-reduce at the end —
+    no full-fleet gather, no host sync.
+
+    Returns ``(new_fleet, new_hidden, participants[n] bool, actions[n],
+    summary)``.
+    """
+    from repro.core.marl.networks import agent_step
+    xp = jnp if fleet_is_jax(fleet) else np
+    M = len(model_sizes)
+    obs = fleet_obs_batch(fleet, round_idx, n_rounds)
+    q, h = agent_step(agent_params, obs, hidden)              # [n, M+1]
+    avail = fleet_affordability(fleet, model_sizes, model_fractions,
+                                local_epochs, batch_size)
+    actions = xp.argmax(xp.where(avail, q, -1e9), axis=-1)
+    q_chosen = xp.take_along_axis(q, actions[:, None], axis=-1)[:, 0]
+    willing = (actions < M) & fleet.alive
+    scores = xp.where(willing, q_chosen.astype(fleet.remaining.dtype),
+                      -xp.inf)
+    participants = fleet_topk_mask(scores, k)
+    m_idx = xp.clip(actions, 0, M - 1)
+    _, _, e_tra, e_com = fleet_cost_matrix(
+        fleet, model_sizes, model_fractions, local_epochs, batch_size)
+    need = xp.take_along_axis(e_tra + e_com, m_idx[:, None], axis=-1)[:, 0]
+    fleet, ok = fleet_charge(fleet, need, participants)
+    # NOTE: the summary's affordability block re-prices the POST-charge
+    # fleet (it describes the state the next decision sees), so the mask
+    # above cannot be reused here; XLA CSEs the shared cost subexpressions
+    # within this single program
+    summary = fleet_summary(fleet, model_sizes, model_fractions, round_idx,
+                            n_rounds, local_epochs, batch_size)
+    return fleet, h, participants & ok, actions, summary
+
+
+dual_selection_energy_step_jit = jax.jit(
+    dual_selection_energy_step, static_argnames=("k", "n_rounds"))
 
 
 class StaticTierSelector(SelectorBase):

@@ -4,7 +4,11 @@ from repro.fl.spec import (EnergySpec, EngineSpec, MarlSpec,  # noqa: F401
 from repro.fl.engine import (RoundEngine, build_world,  # noqa: F401
                              resolve_client_executor, sync_task_budget)
 from repro.fl.environment import FLEnv, FLEnvConfig  # noqa: F401
-from repro.core.fleet import FleetState, make_fleet_state  # noqa: F401
+from repro.core.fleet import (FleetState, fleet_summary,  # noqa: F401
+                              make_fleet_state, sample_fleet_state,
+                              summary_width)
+from repro.core.selection import (marl_state_dim,  # noqa: F401
+                                  resolve_state_mode)
 from repro.models.family import (ModelFamily, get_family,  # noqa: F401
                                  known_families, register_family,
                                  resolve_family)

@@ -35,6 +35,19 @@ Fairness accounting reported in the history (``benchmarks/async_bench.py``):
 * ``wait_for_work`` (async only) — time between a device completing a task
   and its NEXT dispatch; spare capacity, the analogue of sync devices
   sitting out a round, reported for scheduling diagnostics.
+
+Public surface (one-line contracts):
+
+* :class:`RoundEngine` — runs one FL episode under ``cfg.engine_mode``;
+  ``run()`` returns the history dict (selector/buffer owned by caller).
+* :class:`World` — per-episode immutable setup bundle (data shards,
+  fleet, global model, family, paper-scale cost calibration).
+* :func:`build_world` — build a :class:`World` from a config; shards the
+  fleet over the ``"fleet"`` mesh when ``cfg.fleet_mesh`` asks for it.
+* :func:`resolve_client_executor` — map ``cfg.client_executor`` ("auto" /
+  "perclient" / "batched") to the concrete executor for this backend.
+* :func:`sync_task_budget` — total client tasks a sync run dispatches at
+  most (the async engine's default work budget).
 """
 from __future__ import annotations
 
@@ -101,6 +114,12 @@ def build_world(cfg) -> World:
     fleet = fleet.replace(remaining=fleet.battery * cfg.energy_scale)
     if cfg.hotplug_n:                   # hot-plug devices: not yet connected
         fleet = fleet_disconnect(fleet, cfg.n_devices)
+    if getattr(cfg, "fleet_mesh", 0) not in (0, 1):
+        # opt-in data-parallel placement: [n] arrays row-sharded over the
+        # "fleet" mesh so the per-round kernels run SPMD (no-op when the
+        # runtime has a single device)
+        from repro.sharding.fleet import maybe_shard_fleet
+        fleet = maybe_shard_fleet(fleet, cfg.fleet_mesh)
     family = get_family(getattr(cfg, "model_family", None))
     global_params = family.init(key, cfg.num_classes,
                                 width_mult=cfg.width_mult, hw=cfg.hw)

@@ -112,6 +112,17 @@ class FLEnv:
     def state(self) -> np.ndarray:
         return self._obs().reshape(-1)
 
+    @property
+    def state_factored(self) -> np.ndarray:
+        """Fixed-width factored global state (``fleet_summary`` priced with
+        the env's cost model) — the scale-independent twin of ``state``,
+        matching what ``MarlSelector(state_mode="factored")`` sees."""
+        from repro.core.fleet import fleet_summary
+        cfg = self.cfg
+        return np.asarray(fleet_summary(
+            self.fleet, cfg.model_bytes, cfg.model_fractions, self.t,
+            cfg.n_rounds, cfg.local_epochs), np.float32)
+
     def step(self, actions: np.ndarray):
         cfg = self.cfg
         a = np.asarray(actions, np.int64)

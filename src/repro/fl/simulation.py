@@ -81,23 +81,43 @@ class FLConfig:
     # ONE vmap(scan) jit program at 64+ device fleets (<= 4 dispatches per
     # sync round); "perclient" keeps the bit-for-bit legacy per-client loop
     client_executor: str = "auto"       # auto | perclient | batched
+    # --- scaled MARL state + fleet sharding --------------------------------
+    # QMIX mixer global state: "flat" = the n_devices*OBS_DIM concatenation
+    # (bit-for-bit legacy), "factored" = the fixed-width fleet summary whose
+    # state_dim is independent of fleet size; "auto" keeps flat up to
+    # repro.core.selection.FACTORED_AUTO_N (256) devices, factors above
+    state_mode: str = "auto"            # auto | flat | factored
+    # shard FleetState's [n] arrays over a jax.sharding "fleet" mesh of this
+    # many local devices (0/1 = off, -1 = all local devices); selection +
+    # energy kernels then run data-parallel (repro.sharding.fleet)
+    fleet_mesh: int = 0
 
 
 def _make_selector(cfg: FLConfig, n_models: int) -> SelectorBase:
     if cfg.method in ("heterofl", "scalefl"):
         return GreedySelector()          # the paper's fair-comparison arm
     return {
-        "marl": lambda: MarlSelector(cfg.n_devices + cfg.hotplug_n, n_models,
-                                     cfg.n_rounds, cfg.seed),
+        "marl": lambda: MarlSelector(
+            cfg.n_devices + cfg.hotplug_n, n_models, cfg.n_rounds, cfg.seed,
+            state_mode=getattr(cfg, "state_mode", "auto")),
         "greedy": lambda: GreedySelector(),
         "random": lambda: RandomSelector(cfg.seed),
         "static": lambda: StaticTierSelector(cfg.seed),
     }[cfg.selector]()
 
 
+# replay-buffer obs storage budget (float32 elements).  Episode obs are
+# inherently [T+1, n, OBS_DIM], so at 4096+ devices a fixed 64-episode
+# capacity is multi-GB before the first round runs — the "flat QMIX state
+# OOM-scales" half of the Fig. 6 failure.  Capacity degrades gracefully
+# instead (64 episodes at paper scale, >= 4 always).
+_BUFFER_OBS_ELEMS = 2 ** 24
+
+
 def _make_buffer(cfg: FLConfig):
     from repro.core.marl.buffer import ReplayBuffer
-    from repro.core.selection import OBS_DIM
+    from repro.core.selection import OBS_DIM, marl_state_dim
+    from repro.models.family import get_family
     n_agents = cfg.n_devices + cfg.hotplug_n
     if cfg.engine_mode == "async":
         # one episode step per selector.select call: at most one per task
@@ -107,8 +127,13 @@ def _make_buffer(cfg: FLConfig):
         episode_len = 2 * budget + cfg.n_rounds + 8
     else:
         episode_len = cfg.n_rounds
-    return ReplayBuffer(64, episode_len, n_agents, OBS_DIM,
-                        n_agents * OBS_DIM, cfg.seed)
+    state_dim = marl_state_dim(
+        getattr(cfg, "state_mode", "auto"), n_agents,
+        get_family(cfg.model_family).num_submodels())
+    capacity = max(4, min(64, _BUFFER_OBS_ELEMS
+                          // ((episode_len + 1) * n_agents * OBS_DIM)))
+    return ReplayBuffer(capacity, episode_len, n_agents, OBS_DIM,
+                        state_dim, cfg.seed)
 
 
 def run_simulation(cfg, verbose: bool = False) -> Dict:
@@ -173,8 +198,11 @@ def _run_once_reference(cfg: FLConfig, verbose=False, selector=None,
         if buffer is None:
             from repro.core.marl.buffer import ReplayBuffer
             from repro.core.selection import OBS_DIM
+            # state rows must match what THIS selector's episode_arrays
+            # emits — its learner already resolved the state mode (flat
+            # keeps the legacy n*OBS_DIM width bit-for-bit)
             buffer = ReplayBuffer(64, cfg.n_rounds, cfg.n_devices, OBS_DIM,
-                                  cfg.n_devices * OBS_DIM, cfg.seed)
+                                  marl.learner.cfg.state_dim, cfg.seed)
         marl.reset_episode()
 
     hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],

@@ -11,8 +11,9 @@ sub-specs with ``__post_init__`` validation:
   early-exit MLP), plus the local-training knobs (width, image size,
   epochs, batch, lr).
 * :class:`EngineSpec` — round scheduling: sync/async mode, staleness decay,
-  async budgets, client-update executor.
-* :class:`MarlSpec`   — dual-selection strategy and QMIX training cadence.
+  async budgets, client-update executor, fleet sharding mesh.
+* :class:`MarlSpec`   — dual-selection strategy, QMIX training cadence and
+  global-state mode (flat vs the fixed-width factored summary).
 * :class:`EnergySpec` — battery scaling and hot-plug scenario.
 
 ``from_flat`` / ``to_flat`` bridge the two representations bit-for-bit
@@ -25,12 +26,27 @@ existing ``FLConfig(...)`` callsite keeps working unchanged —
                           model=ModelSpec(family="mlp"),
                           marl=MarlSpec(selector="greedy"))
     hist = run_simulation(spec)
+
+Public surface (one-line contracts):
+
+* :class:`ModelSpec` / :class:`EngineSpec` / :class:`MarlSpec` /
+  :class:`EnergySpec` — validated sub-specs (each field documented
+  inline; construction raises ``ValueError`` on any bad knob).
+* :class:`SimulationSpec` — one experiment-grid cell; composes the four
+  sub-specs and cross-validates method x family support.
+* :meth:`SimulationSpec.from_flat` — lift + validate a flat ``FLConfig``.
+* :meth:`SimulationSpec.to_flat` — lower to the flat engine surface
+  (exact inverse of ``from_flat``).
+* :func:`ensure_flat_config` — accept either representation, validate,
+  return the ``FLConfig`` the engine runs on (flat inputs are returned
+  by identity, keeping the compatibility surface bit-for-bit).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
+from repro.core.selection import STATE_MODES as _CONCRETE_STATE_MODES
 from repro.fl.simulation import FLConfig
 from repro.models.family import get_family, known_families
 
@@ -38,6 +54,9 @@ METHODS = ("drfl", "heterofl", "scalefl")
 SELECTORS = ("marl", "greedy", "random", "static")
 ENGINE_MODES = ("sync", "async")
 CLIENT_EXECUTORS = ("auto", "perclient", "batched")
+# config level adds "auto" on top of the selector's concrete modes, so a
+# mode added in repro.core.selection is accepted here automatically
+STATE_MODES = ("auto",) + _CONCRETE_STATE_MODES
 
 
 def _check(cond, msg):
@@ -80,6 +99,7 @@ class EngineSpec:
     async_eval_every: int = 1
     async_time_horizon: float = 0.0     # sim-seconds (0 = task budget)
     async_task_budget: int = 0          # client tasks (0 = sync-equivalent)
+    fleet_mesh: int = 0                 # FleetState shards (0/1 off, -1 all)
 
     def __post_init__(self):
         _check_choice(self.mode, ENGINE_MODES, "engine.mode")
@@ -93,6 +113,8 @@ class EngineSpec:
                "engine.async_time_horizon must be >= 0")
         _check(self.async_task_budget >= 0,
                "engine.async_task_budget must be >= 0")
+        _check(self.fleet_mesh >= -1,
+               "engine.fleet_mesh must be >= -1 (-1 = all local devices)")
 
 
 @dataclasses.dataclass
@@ -103,9 +125,11 @@ class MarlSpec:
     train_every: int = 2
     updates_per_round: int = 2
     episodes: int = 1                   # selector pre-training episodes
+    state_mode: str = "auto"            # auto | flat | factored QMIX state
 
     def __post_init__(self):
         _check_choice(self.selector, SELECTORS, "marl.selector")
+        _check_choice(self.state_mode, STATE_MODES, "marl.state_mode")
         _check(len(tuple(self.reward_weights)) == 3,
                "marl.reward_weights must have exactly 3 entries (w1,w2,w3)")
         _check(self.train_every >= 1, "marl.train_every must be >= 1")
@@ -187,12 +211,14 @@ class SimulationSpec:
                 staleness_decay=cfg.staleness_decay,
                 async_eval_every=cfg.async_eval_every,
                 async_time_horizon=cfg.async_time_horizon,
-                async_task_budget=cfg.async_task_budget),
+                async_task_budget=cfg.async_task_budget,
+                fleet_mesh=cfg.fleet_mesh),
             marl=MarlSpec(
                 selector=cfg.selector, reward_weights=cfg.reward_weights,
                 train_every=cfg.marl_train_every,
                 updates_per_round=cfg.marl_updates_per_round,
-                episodes=cfg.marl_episodes),
+                episodes=cfg.marl_episodes,
+                state_mode=cfg.state_mode),
             energy=EnergySpec(
                 scale=cfg.energy_scale, hotplug_round=cfg.hotplug_round,
                 hotplug_n=cfg.hotplug_n))
@@ -222,7 +248,9 @@ class SimulationSpec:
             async_eval_every=self.engine.async_eval_every,
             async_time_horizon=self.engine.async_time_horizon,
             async_task_budget=self.engine.async_task_budget,
-            client_executor=self.engine.client_executor)
+            client_executor=self.engine.client_executor,
+            state_mode=self.marl.state_mode,
+            fleet_mesh=self.engine.fleet_mesh)
 
 
 def ensure_flat_config(cfg) -> FLConfig:

@@ -27,6 +27,29 @@ programs and the mask / stack-template caches, so two call sites asking for
 the same family share compiled programs (the engine and the frozen
 reference loop trace the SAME jitted functions — that is what keeps the
 sync-parity contract bit-for-bit).
+
+Public surface (one-line contracts):
+
+* :class:`ModelFamily` — the abstract protocol: ``init`` /
+  ``apply_all_exits`` / ``num_submodels`` (model surface), ``submodel_*``
+  (depth-prefix views + size accounting), ``update_mask`` /
+  ``stack_groups`` / ``stack_template`` / ``held_groups`` /
+  ``unstack_groups`` (aggregation layout), ``loss_fn`` /
+  ``client_update`` / ``bucket_trace_context`` (client training),
+  ``cost_model`` (paper-scale Eq. 5/7 calibration),
+  ``state_summary_width`` / ``fleet_summary`` (the factored QMIX global
+  state, sized by the family not the fleet), ``supports`` /
+  ``supported_methods`` (method gating).
+* :class:`LayerwiseFamily` — everything above implemented generically for
+  the canonical ``{"stem", "stages": [...], "exits": [...]}`` layout;
+  subclasses supply ``init`` / ``apply_all_exits`` / ``num_submodels`` /
+  ``flops_per_sample``.
+* :func:`register_family` — add a singleton to the registry (key =
+  ``family.name`` unless overridden).
+* :func:`known_families` — sorted registry keys (builtins auto-load).
+* :func:`get_family` — registry lookup; ``None`` -> the default family.
+* :func:`resolve_family` — accept name / instance / None uniformly.
+* :func:`cross_entropy` — mean CE over a batch (shared loss primitive).
 """
 from __future__ import annotations
 
@@ -150,6 +173,29 @@ class ModelFamily:
         """(submodel bytes, FLOP fractions) at PAPER scale (width 1.0,
         ``ref_hw`` images) — what the Eq. 5/7 energy accounting charges."""
         raise NotImplementedError
+
+    # -- factored MARL state ----------------------------------------------
+    def state_summary_width(self, n_bins: Optional[int] = None) -> int:
+        """Width of this family's factored QMIX global state
+        (:func:`repro.core.fleet.summary_width` over its submodel count) —
+        a function of the FAMILY, independent of ``n_devices``.  This is
+        the registry hook the scaled MARL selector sizes its mixer with."""
+        from repro.core import fleet as core_fleet
+        bins = core_fleet.SUMMARY_BINS if n_bins is None else n_bins
+        return core_fleet.summary_width(self.num_submodels(), bins)
+
+    def fleet_summary(self, fleet, round_idx=0, n_rounds: int = 1, *,
+                      num_classes: int = 10, local_epochs: int = 5,
+                      batch_size: int = 32):
+        """Fixed-width fleet summary priced with THIS family's Eq. 5/7
+        cost model (per-submodel affordability fractions use the family's
+        paper-scale sizes/FLOP fractions) — see
+        :func:`repro.core.fleet.fleet_summary`."""
+        from repro.core import fleet as core_fleet
+        sizes, fractions = self.cost_model(num_classes)
+        return core_fleet.fleet_summary(
+            fleet, sizes, fractions, round_idx, n_rounds,
+            local_epochs, batch_size)
 
     def supports(self, method: str) -> bool:
         return method in self.supported_methods

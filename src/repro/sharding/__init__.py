@@ -1,3 +1,7 @@
 from repro.sharding.rules import (activation_spec, batch_axes, cache_specs,
                                   constrain, param_specs, set_activation_mesh,
                                   spec_for)  # noqa: F401
+from repro.sharding.fleet import (FLEET_AXIS, fleet_mesh,  # noqa: F401
+                                  fleet_shardings, fleet_spec_for,
+                                  is_sharded, maybe_shard_fleet, shard_fleet,
+                                  unshard_fleet)

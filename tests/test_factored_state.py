@@ -1,0 +1,238 @@
+"""Factored QMIX state (state_mode="factored") vs the flat legacy state.
+
+Contracts:
+* ``state_mode="flat"`` is BIT-FOR-BIT the pre-factoring selector: the
+  frozen reference copy of the original select/episode_arrays logic kept
+  below must produce identical selections, Q values and episode arrays.
+* the factored state's width (QMIX ``state_dim``) is independent of
+  ``n_devices`` — the whole point of the refactor — and matches the
+  ``ModelFamily.state_summary_width`` registry hook.
+* ``fleet_summary`` is permutation-invariant over device order.
+* ``"auto"`` resolves flat below FACTORED_AUTO_N and factored above, and
+  the factored selector trains end-to-end through ``run_simulation``
+  (replay buffer sized by the resolved state_dim).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fleet import (FleetState, fleet_summary, make_fleet_state,
+                              summary_width)
+from repro.core.marl.qmix import QmixConfig, QmixLearner, epsilon
+from repro.core.selection import (FACTORED_AUTO_N, OBS_DIM, MarlSelector,
+                                  Selection, as_fleet_state, fleet_obs,
+                                  marl_state_dim, resolve_state_mode)
+from repro.models.family import get_family
+
+SIZES = (2.8e6, 8.4e6, 22.5e6, 44.8e6)
+FRACS = (0.11, 0.3, 0.72, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# frozen pre-factoring selector (the parity reference)
+# ---------------------------------------------------------------------------
+#
+# Verbatim copy of MarlSelector.select/episode_arrays as they were BEFORE
+# state_mode existed (state = obs.reshape(-1), state_dim = n * OBS_DIM).
+# Do not "simplify" toward the current implementation — this class is the
+# contract that state_mode="flat" reproduces the pre-PR trajectory.
+
+
+class _PreFactoringMarlSelector:
+    def __init__(self, n_devices, n_models, n_rounds, seed=0):
+        import jax.numpy as jnp  # noqa: F401  (parity with original imports)
+        self.n_models = n_models
+        self.n_rounds = n_rounds
+        cfg = QmixConfig(
+            n_agents=n_devices, obs_dim=OBS_DIM, num_actions=n_models + 1,
+            state_dim=n_devices * OBS_DIM,
+            eps_decay_rounds=max(10, n_rounds // 2))
+        self.learner = QmixLearner(cfg, jax.random.PRNGKey(seed))
+        self.key = jax.random.PRNGKey(seed + 1)
+        self.hidden = self.learner.init_hidden()
+        self.total_rounds = 0
+        self.ep_obs, self.ep_state = [], []
+        self.ep_actions, self.ep_rewards = [], []
+
+    def select(self, devices, round_idx, k, model_sizes, model_fractions,
+               local_epochs=5, batch_size=32):
+        import jax.numpy as jnp
+
+        from repro.core.fleet import (fleet_affordability,
+                                      fleet_affordability_jit, fleet_is_jax)
+        fleet = as_fleet_state(devices)
+        obs = fleet_obs(fleet, round_idx, self.n_rounds)
+        state = obs.reshape(-1)
+        self.key, sub = jax.random.split(self.key)
+        eps = epsilon(self.learner.cfg, self.total_rounds)
+        self.total_rounds += 1
+        aff = (fleet_affordability_jit if fleet_is_jax(fleet)
+               else fleet_affordability)
+        avail = np.asarray(aff(
+            fleet, model_sizes, model_fractions, local_epochs, batch_size))
+        actions, qv, self.hidden = self.learner.act(
+            jnp.asarray(obs), self.hidden, sub, eps, jnp.asarray(avail))
+        qv = np.array(qv)
+        alive = np.asarray(fleet.alive)
+        actions = np.where(alive, np.array(actions), self.n_models)
+        willing = np.flatnonzero(actions < self.n_models)
+        order = willing[np.argsort(-qv[willing], kind="stable")]
+        chosen = [int(i) for i in order[:k]]
+        model_choice = [-1] * len(fleet)
+        for i in chosen:
+            model_choice[i] = int(actions[i])
+        self.ep_obs.append(obs)
+        self.ep_state.append(state)
+        self.ep_actions.append(actions.copy())
+        return Selection(participants=chosen, model_choice=model_choice,
+                         q_values=qv)
+
+    def observe_reward(self, reward, sim_time=None):
+        self.ep_rewards.append(float(reward))
+
+    def episode_arrays(self, final_devices, round_idx):
+        obs = np.stack(self.ep_obs + [fleet_obs(
+            as_fleet_state(final_devices), round_idx, self.n_rounds)])
+        state = obs.reshape(obs.shape[0], -1)
+        return (obs, state, np.stack(self.ep_actions),
+                np.asarray(self.ep_rewards, np.float32))
+
+
+def _drained_fleet(n=8, seed=3):
+    fleet = make_fleet_state(n, seed=seed, backend="numpy")
+    return fleet.replace(remaining=fleet.battery * 0.05)
+
+
+def test_flat_mode_bitexact_vs_pre_factoring_selector():
+    """state_mode="flat" reproduces the pre-PR selector trajectory
+    bit-for-bit at n=8: selections, Q values, episode arrays."""
+    fleet = _drained_fleet(8)
+    cur = MarlSelector(8, 4, n_rounds=6, seed=0, state_mode="flat")
+    ref = _PreFactoringMarlSelector(8, 4, n_rounds=6, seed=0)
+    assert cur.learner.cfg == ref.learner.cfg
+    for t in range(4):
+        a = cur.select(fleet, t, 3, SIZES, FRACS, local_epochs=2)
+        b = ref.select(fleet, t, 3, SIZES, FRACS, local_epochs=2)
+        assert a.participants == b.participants
+        assert a.model_choice == b.model_choice
+        np.testing.assert_array_equal(a.q_values, b.q_values)
+        cur.observe_reward(0.25 * t)
+        ref.observe_reward(0.25 * t)
+    for got, want in zip(cur.episode_arrays(fleet, 4),
+                         ref.episode_arrays(fleet, 4)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_run_simulation_flat_equals_auto_at_small_n():
+    """"auto" resolves to the flat path below FACTORED_AUTO_N, so the
+    default config keeps the legacy trajectory bit-for-bit."""
+    from repro.fl import FLConfig, run_simulation
+    base = dict(n_devices=8, n_rounds=3, participation=0.5, n_train=500,
+                local_epochs=1, method="drfl", selector="marl", seed=0)
+    h_auto = run_simulation(FLConfig(**base))
+    h_flat = run_simulation(FLConfig(**base, state_mode="flat"))
+    for key in ("acc_mean", "energy", "participants", "model_choices",
+                "reward"):
+        assert h_auto[key] == h_flat[key], key
+
+
+def test_factored_state_dim_independent_of_n_devices():
+    M = 4
+    dims = {n: marl_state_dim("factored", n, M)
+            for n in (8, 256, 4096, 1_048_576)}
+    assert len(set(dims.values())) == 1, dims
+    assert dims[8] == summary_width(M)
+    # flat scales linearly — the contrast the refactor removes
+    assert marl_state_dim("flat", 4096, M) == 4096 * OBS_DIM
+    # instantiated learners agree with the helper
+    sel = MarlSelector(64, M, n_rounds=10, seed=0, state_mode="factored")
+    assert sel.learner.cfg.state_dim == summary_width(M)
+    # and the ModelFamily registry hook reports the same width
+    fam = get_family("cnn")
+    assert fam.state_summary_width() == summary_width(fam.num_submodels())
+
+
+def test_auto_resolution_thresholds():
+    # the boundary is INCLUSIVE on the flat side: the documented Fig. 6
+    # n=256 row must keep its legacy trajectory
+    assert resolve_state_mode("auto", FACTORED_AUTO_N) == "flat"
+    assert resolve_state_mode("auto", FACTORED_AUTO_N + 1) == "factored"
+    assert resolve_state_mode("flat", 10 ** 6) == "flat"
+    with pytest.raises(ValueError):
+        resolve_state_mode("fatored", 8)
+    from repro.fl.spec import MarlSpec
+    with pytest.raises(ValueError):
+        MarlSpec(state_mode="fatored")
+
+
+def test_summary_permutation_invariant():
+    fleet = _drained_fleet(33, seed=7)
+    s = fleet_summary(fleet, SIZES, FRACS, 3, 20)
+    assert s.shape == (summary_width(len(SIZES)),)
+    perm = np.random.default_rng(0).permutation(33)
+    fields = {f: getattr(fleet, f)[perm]
+              for f in ("compute", "p_train", "p_com", "bandwidth",
+                        "battery", "remaining", "data_size", "mode_compute",
+                        "mode_power", "alive", "busy_until")}
+    s_perm = fleet_summary(fleet.replace(**fields, tiers=(), modes=()),
+                           SIZES, FRACS, 3, 20)
+    np.testing.assert_allclose(s, s_perm, rtol=1e-6, atol=1e-7)
+
+
+def test_summary_tracks_fleet_dynamics():
+    """Sanity on the feature semantics: draining batteries moves alive
+    mass to lower battery bins and shrinks affordability fractions."""
+    full = make_fleet_state(64, seed=1, backend="numpy")
+    drained = full.replace(remaining=full.battery * 0.02)
+    s_full = fleet_summary(full, SIZES, FRACS, 0, 10)
+    s_drained = fleet_summary(drained, SIZES, FRACS, 0, 10)
+    n_bins = (len(s_full) - len(SIZES) - 5) // 2
+    # full fleet: all alive mass in the top battery bin; drained: bottom
+    assert s_full[n_bins - 1] == pytest.approx(1.0)
+    assert s_drained[0] == pytest.approx(1.0)
+    # affordability of the largest model collapses when drained
+    aff_full = s_full[2 * n_bins:2 * n_bins + len(SIZES)]
+    aff_drained = s_drained[2 * n_bins:2 * n_bins + len(SIZES)]
+    assert aff_full[-1] > aff_drained[-1]
+    # energy-ratio total matches the ledger
+    assert s_drained[2 * n_bins + len(SIZES)] == pytest.approx(0.02)
+
+
+def test_factored_selector_trains_end_to_end():
+    """run_simulation with state_mode="factored" at a small fleet: buffer
+    state rows are summary-width, QMIX updates run, history is sane."""
+    from repro.fl import FLConfig, run_simulation
+    cfg = FLConfig(n_devices=8, n_rounds=4, participation=0.5, n_train=400,
+                   local_epochs=1, method="drfl", selector="marl", seed=0,
+                   state_mode="factored", marl_train_every=2,
+                   marl_episodes=2)
+    h = run_simulation(cfg)
+    assert len(h["acc_mean"]) == 4
+    assert np.isfinite(h["acc_mean"]).all()
+
+
+def test_reference_loop_supports_factored_state():
+    """The frozen sync reference loop sizes its internal replay buffer by
+    the resolved state mode too (regression: it hard-coded the flat
+    n*OBS_DIM width and crashed on factored episode commits)."""
+    from repro.fl import FLConfig
+    from repro.fl.simulation import _run_once_reference
+    cfg = FLConfig(n_devices=6, n_rounds=2, participation=0.5, n_train=400,
+                   local_epochs=1, method="drfl", selector="marl", seed=0,
+                   state_mode="factored", marl_train_every=1)
+    h, _, buf = _run_once_reference(cfg)
+    assert buf.state.shape[-1] == summary_width(4)
+    assert len(buf) >= 1
+    assert np.isfinite(h["acc_mean"]).all()
+
+
+def test_factored_selector_async_engine():
+    from repro.fl import FLConfig, run_simulation
+    cfg = FLConfig(n_devices=8, n_rounds=3, participation=0.5, n_train=400,
+                   local_epochs=1, method="drfl", selector="marl", seed=1,
+                   state_mode="factored", engine_mode="async")
+    h = run_simulation(cfg)
+    assert np.isfinite(h["acc_mean"]).all()
+    assert h["n_tasks"] > 0

@@ -1,0 +1,180 @@
+"""Sharded FleetState (repro.sharding.fleet) vs single-placement parity.
+
+Most tests here need a multi-device runtime; the shard-smoke CI job (and
+``benchmarks/fleet_shard_bench.py``) force one on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.  Under the default
+single-device tier-1 run they skip — except the subprocess test at the
+bottom, which spawns a fresh interpreter with the flag set so the
+sharded-vs-unsharded equivalence contract is exercised by tier-1 too
+(``slow``-marked: it pays a second jax startup).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fleet import (fleet_affordability_jit, fleet_charge_jit,
+                              fleet_summary_jit, make_fleet_state)
+from repro.sharding.fleet import (FLEET_AXIS, fleet_mesh, fleet_spec_for,
+                                  is_sharded, maybe_shard_fleet, shard_fleet,
+                                  unshard_fleet)
+
+SIZES = (2.8e6, 8.4e6, 22.5e6, 44.8e6)
+FRACS = (0.11, 0.3, 0.72, 1.0)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs a multi-device runtime (shard-smoke CI sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def test_maybe_shard_noop_below_two_shards():
+    fleet = make_fleet_state(8, seed=0, backend="jax")
+    assert maybe_shard_fleet(fleet, 0) is fleet
+    assert maybe_shard_fleet(fleet, 1) is fleet
+    assert not is_sharded(fleet)
+
+
+def test_single_device_mesh_spec():
+    mesh = fleet_mesh(1)
+    # trivially divisible: the fleet axis still names the placement
+    assert fleet_spec_for("remaining", (32,), mesh) == \
+        jax.sharding.PartitionSpec(FLEET_AXIS)
+    assert fleet_spec_for("scalar", (), mesh) == jax.sharding.PartitionSpec()
+
+
+@multi_device
+def test_shard_fleet_placement_and_divisibility_fallback():
+    mesh = fleet_mesh()
+    n_dev = mesh.shape[FLEET_AXIS]
+    fleet = shard_fleet(make_fleet_state(16 * n_dev, 0, backend="jax"), mesh)
+    assert is_sharded(fleet)
+    assert len(fleet.remaining.sharding.device_set) == n_dev
+    # indivisible fleet dim falls back to replication instead of erroring
+    odd = shard_fleet(make_fleet_state(16 * n_dev + 1, 0, backend="jax"),
+                      mesh)
+    assert odd.remaining.sharding.is_fully_replicated
+    # round-trip back to host numpy
+    back = unshard_fleet(fleet)
+    assert isinstance(back.remaining, np.ndarray)
+    np.testing.assert_array_equal(back.remaining,
+                                  np.asarray(fleet.remaining))
+
+
+@multi_device
+def test_sharded_kernels_match_single_placement():
+    n = 32 * len(jax.devices())
+    single = make_fleet_state(n, seed=5, backend="jax")
+    single = single.replace(remaining=single.battery * 0.05)
+    sharded = shard_fleet(single, fleet_mesh())
+
+    aff_s = np.asarray(fleet_affordability_jit(single, SIZES, FRACS, 5, 32))
+    aff_p = np.asarray(fleet_affordability_jit(sharded, SIZES, FRACS, 5, 32))
+    np.testing.assert_array_equal(aff_s, aff_p)
+
+    need = np.linspace(0.0, 400.0, n).astype(np.float32)
+    active = (np.arange(n) % 3 != 1)
+    f_s, ok_s = fleet_charge_jit(single, need, active)
+    f_p, ok_p = fleet_charge_jit(sharded, need, active)
+    assert is_sharded(f_p)                 # sharding survives the kernel
+    np.testing.assert_array_equal(np.asarray(ok_s), np.asarray(ok_p))
+    np.testing.assert_allclose(np.asarray(f_s.remaining),
+                               np.asarray(f_p.remaining), rtol=1e-6)
+
+    s_s = np.asarray(fleet_summary_jit(single, SIZES, FRACS, 2, n_rounds=10))
+    s_p = np.asarray(fleet_summary_jit(sharded, SIZES, FRACS, 2,
+                                       n_rounds=10))
+    np.testing.assert_allclose(s_s, s_p, rtol=1e-5, atol=1e-6)
+
+
+@multi_device
+def test_sharded_dual_selection_step_equivalence():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.marl.networks import agent_hidden_init, agent_init
+    from repro.core.selection import OBS_DIM, dual_selection_energy_step_jit
+    mesh = fleet_mesh()
+    n = 64 * mesh.shape[FLEET_AXIS]
+    fleet = make_fleet_state(n, seed=2, backend="jax")
+    params = agent_init(jax.random.PRNGKey(0), OBS_DIM, len(SIZES) + 1)
+    hidden = agent_hidden_init(n)
+    args = (SIZES, FRACS)
+
+    f1, h1, part1, act1, sum1 = dual_selection_energy_step_jit(
+        params, hidden, fleet, *args, k=8, n_rounds=10)
+    f2, h2, part2, act2, sum2 = dual_selection_energy_step_jit(
+        params, jax.device_put(hidden, NamedSharding(mesh, P(FLEET_AXIS))),
+        shard_fleet(fleet, mesh), *args, k=8, n_rounds=10)
+    np.testing.assert_array_equal(np.asarray(part1), np.asarray(part2))
+    np.testing.assert_array_equal(np.asarray(act1), np.asarray(act2))
+    np.testing.assert_allclose(np.asarray(f1.remaining),
+                               np.asarray(f2.remaining), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sum1), np.asarray(sum2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@multi_device
+def test_engine_runs_on_sharded_fleet():
+    """fleet_mesh=-1 threads through build_world: the whole sync engine
+    runs with the fleet row-sharded (host code gathers transparently)."""
+    from repro.fl import FLConfig, run_simulation
+    from repro.fl.engine import build_world
+    cfg = FLConfig(n_devices=16, n_rounds=2, participation=0.5, n_train=400,
+                   local_epochs=1, method="drfl", selector="greedy", seed=0,
+                   fleet_mesh=-1)
+    assert is_sharded(build_world(cfg).fleet)
+    h = run_simulation(cfg)
+    ref = run_simulation(FLConfig(**{**cfg.__dict__, "fleet_mesh": 0}))
+    assert h["participants"] == ref["participants"]
+    assert h["acc_mean"] == ref["acc_mean"]
+
+
+# ---------------------------------------------------------------------------
+# tier-1 coverage under the default single-device runtime
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_equivalence_in_forced_multidevice_subprocess():
+    """Spawns a fresh interpreter with a forced 4-device CPU mesh and runs
+    the kernel-equivalence checks there, so tier-1 exercises the sharded
+    path even though this process owns a single device."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        assert len(jax.devices()) == 4, jax.devices()
+        from repro.core.fleet import make_fleet_state, fleet_summary_jit, \\
+            fleet_charge_jit
+        from repro.sharding.fleet import fleet_mesh, shard_fleet, is_sharded
+        SIZES = (2.8e6, 8.4e6, 22.5e6, 44.8e6)
+        FRACS = (0.11, 0.3, 0.72, 1.0)
+        single = make_fleet_state(64, seed=5, backend="jax")
+        sharded = shard_fleet(single, fleet_mesh())
+        assert is_sharded(sharded)
+        s1 = np.asarray(fleet_summary_jit(single, SIZES, FRACS, 1,
+                                          n_rounds=4))
+        s2 = np.asarray(fleet_summary_jit(sharded, SIZES, FRACS, 1,
+                                          n_rounds=4))
+        np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-6)
+        need = np.linspace(0, 300, 64).astype(np.float32)
+        f1, ok1 = fleet_charge_jit(single, need, np.ones(64, bool))
+        f2, ok2 = fleet_charge_jit(sharded, need, np.ones(64, bool))
+        np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
+        np.testing.assert_allclose(np.asarray(f1.remaining),
+                                   np.asarray(f2.remaining), rtol=1e-6)
+        print("SHARDED-OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED-OK" in out.stdout
