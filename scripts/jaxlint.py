@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""jaxlint CLI wrapper — equivalent to ``python -m repro.analysis``.
+
+Usable without installing the package or setting PYTHONPATH: it adds the
+repo's ``src/`` to ``sys.path`` itself and defaults ``--root`` to the
+repo this script lives in.
+"""
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a == "--root" or a.startswith("--root=") for a in argv):
+        argv = ["--root", _REPO] + argv
+    sys.exit(main(argv))

@@ -1,0 +1,17 @@
+"""repro.analysis — jaxlint: repo-aware static analysis for the DR-FL
+stack, plus runtime compile guards.
+
+Entry points:
+
+* ``python -m repro.analysis`` / ``scripts/jaxlint.py`` — run the lint.
+* :func:`repro.analysis.lint.run_lint` — programmatic API.
+* :mod:`repro.analysis.runtime` — ``compile_guard`` for tests.
+
+See ``docs/ANALYSIS.md`` for the rule catalogue and pragma syntax.
+"""
+from .core import BAD_PRAGMA, Finding, RepoIndex
+from .lint import LintConfig, Report, run_lint, write_json
+from .runtime import compile_guard
+
+__all__ = ["BAD_PRAGMA", "Finding", "RepoIndex", "LintConfig", "Report",
+           "run_lint", "write_json", "compile_guard"]

@@ -1,0 +1,65 @@
+"""``python -m repro.analysis`` — jaxlint CLI.
+
+Exit codes: 0 clean (all findings suppressed with reasons), 1 any
+unsuppressed finding, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    from .lint import LintConfig, run_lint, write_json
+    from .rules import ALL_RULES
+    from .rules import frozen_refs as frozen_refs_rule
+
+    parser = argparse.ArgumentParser(
+        prog="jaxlint",
+        description="Repo-aware static analysis for the DR-FL JAX stack.")
+    parser.add_argument("--root", default=".",
+                        help="repo root (default: cwd)")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write the machine-readable report here")
+    parser.add_argument("--rule", action="append", default=None,
+                        metavar="RULE", help="run only this rule "
+                        "(repeatable; default: all)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print registered rule ids and exit")
+    parser.add_argument("--bless-frozen", action="store_true",
+                        help="recompute and write the frozen-reference "
+                        "hash ledger, then exit")
+    parser.add_argument("-v", "--verbose", action="store_true",
+                        help="also print suppressed findings")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(ALL_RULES):
+            print(name)
+        return 0
+
+    config = LintConfig(repo_root=args.root, rules=args.rule)
+
+    if args.bless_frozen:
+        hashes = frozen_refs_rule.bless(config)
+        for tid, h in sorted(hashes.items()):
+            print(f"blessed {tid}: {h[:16]}…")
+        print(f"wrote {config.frozen_ledger_rel}")
+        return 0
+
+    if args.rule:
+        unknown = sorted(set(args.rule) - set(ALL_RULES))
+        if unknown:
+            print(f"jaxlint: unknown rule(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    report = run_lint(config)
+    print(report.render(verbose=args.verbose))
+    if args.json:
+        write_json(report, args.json)
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,147 @@
+"""Static call graph over the repo's own functions.
+
+Edges are resolved conservatively from three kinds of call sites:
+
+* bare names — resolved through the module's ``from``-import table and
+  local defs, plus module-level ``x_jit = jax.jit(x)`` aliases;
+* ``mod.func(...)`` attribute calls where ``mod`` is an imported module
+  alias (``fl_batch.run_bucket`` → ``repro.fl.batch:run_bucket``);
+* ``self.method(...)`` / ``cls.method(...)`` → same-class method, and as
+  a fallback ``obj.method(...)`` → EVERY repo method of that name (cheap
+  over-approximation; catches ``selector.select()``-style dispatch
+  without type inference).
+
+The hot-path set used by the host-sync rule is the closure of the root
+functions under these edges.  False edges only *widen* the checked set —
+safe direction for a performance lint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from .core import FuncInfo, Module, RepoIndex
+
+
+def _method_name_index(index: RepoIndex) -> Dict[str, List[str]]:
+    by_name: Dict[str, List[str]] = {}
+    for qual, info in index.functions.items():
+        by_name.setdefault(info.name, []).append(qual)
+    return by_name
+
+
+def build_call_graph(index: RepoIndex) -> Dict[str, Set[str]]:
+    """qualname -> set of callee qualnames."""
+    by_name = _method_name_index(index)
+    graph: Dict[str, Set[str]] = {}
+    for qual, info in index.functions.items():
+        mod = index.modules[info.module]
+        graph[qual] = _edges_for(info, mod, index, by_name)
+    return graph
+
+
+def _resolve_name(name: str, mod: Module, index: RepoIndex) -> List[str]:
+    """Resolve a bare called name inside ``mod`` to repo qualnames."""
+    # module-level jit alias: fall through to the wrapped function
+    if name in mod.jit_aliases:
+        name = mod.jit_aliases[name][0]
+    imp = mod.from_imports.get(name)
+    if imp:
+        target_mod, orig = imp
+        hit = index.functions.get(f"{target_mod}:{orig}")
+        if hit:
+            return [hit.qualname]
+        # from repro.fl import engine  → module object, not a function
+        sub = index.modules.get(f"{target_mod}.{orig}")
+        if sub is None and index.functions.get(f"{target_mod}:{orig}") is None:
+            # re-export through a package __init__: search by bare name
+            cands = [q for q in index.functions
+                     if q.endswith(f":{orig}")
+                     and index.functions[q].class_name is None]
+            if len(cands) == 1:
+                return cands
+        return []
+    hit = index.functions.get(f"{mod.modname}:{name}")
+    if hit and hit.class_name is None:
+        return [hit.qualname]
+    # classes called as constructors: Cls() reaches Cls.__init__
+    init = index.functions.get(f"{mod.modname}:{name}.__init__")
+    if init:
+        return [init.qualname]
+    return []
+
+
+def _edges_for(info: FuncInfo, mod: Module, index: RepoIndex,
+               by_name: Dict[str, List[str]]) -> Set[str]:
+    edges: Set[str] = set()
+    for node in ast.walk(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if isinstance(func, ast.Name):
+            edges.update(_resolve_name(func.id, mod, index))
+        elif isinstance(func, ast.Attribute):
+            attr = func.attr
+            base = func.value
+            if isinstance(base, ast.Name):
+                if base.id in ("self", "cls") and info.class_name:
+                    hit = index.functions.get(
+                        f"{info.module}:{info.class_name}.{attr}")
+                    if hit:
+                        edges.add(hit.qualname)
+                        continue
+                alias = mod.module_aliases.get(base.id)
+                if alias:
+                    target = alias if alias.startswith(index.package) else None
+                    if target:
+                        hit = index.functions.get(f"{target}:{attr}")
+                        if hit:
+                            edges.add(hit.qualname)
+                        continue
+                imp = mod.from_imports.get(base.id)
+                if imp:
+                    # from repro import fl; fl.something(...)
+                    submod = f"{imp[0]}.{imp[1]}"
+                    hit = index.functions.get(f"{submod}:{attr}")
+                    if hit:
+                        edges.add(hit.qualname)
+                        continue
+            # fallback: every repo method with this name.  Over-approximate
+            # on purpose: `selector.select(...)` must reach every Selector
+            # implementation; false edges only widen the hot set.
+            edges.update(q for q in by_name.get(attr, ())
+                         if index.functions[q].class_name is not None)
+    return edges
+
+
+def reachable_from(graph: Dict[str, Set[str]],
+                   roots: Iterable[str]) -> Set[str]:
+    seen: Set[str] = set()
+    stack = [r for r in roots if r in graph]
+    while stack:
+        cur = stack.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        stack.extend(graph.get(cur, ()))
+    return seen
+
+
+def resolve_roots(index: RepoIndex, root_specs: Iterable[str]) -> List[str]:
+    """Expand root specs to qualnames.
+
+    A spec is either an exact qualname (``repro.fl.engine:RoundEngine.run``),
+    a ``module:Class`` pair (all methods of the class), or a bare function
+    spec ``module:func``.
+    """
+    out: List[str] = []
+    for spec in root_specs:
+        if spec in index.functions:
+            out.append(spec)
+            continue
+        modname, _, name = spec.partition(":")
+        # class root: every method
+        hits = [q for q, f in index.functions.items()
+                if f.module == modname and f.class_name == name]
+        out.extend(hits)
+    return out

@@ -1,0 +1,135 @@
+"""jaxlint driver: config, rule execution, text/JSON reports.
+
+``run_lint(LintConfig(repo_root=...))`` builds the :class:`RepoIndex`,
+runs every registered rule, applies suppression pragmas, and returns a
+:class:`Report`.  Exit-code contract (used by CI): 0 when every finding
+is suppressed with a reason, 1 when any unsuppressed finding remains,
+2 on driver misuse.
+
+Every repo-specific anchor a rule needs (hot-path roots, the FleetState
+field tuple, the sharding rule table, the kernels directory, the frozen
+ledger) lives on :class:`LintConfig` so the fixture tests in
+``tests/test_analysis.py`` can point the same rules at tmp mini-repos.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .core import Finding, RepoIndex, apply_pragmas
+
+
+@dataclasses.dataclass
+class LintConfig:
+    repo_root: str
+    src_rel: str = "src"
+    package: str = "repro"
+    #: run only these rule ids (None = all registered rules)
+    rules: Optional[Sequence[str]] = None
+
+    # -- host-sync-in-hot-path ---------------------------------------------
+    #: call-graph roots: "module:Class" (every method) or "module:func"
+    hot_roots: Tuple[str, ...] = (
+        "repro.fl.engine:RoundEngine",
+        "repro.core.selection:dual_selection_energy_step",
+        "repro.models.family:ModelFamily.client_update",
+    )
+    #: functions whose RETURN VALUE is host-side data (they pay their own
+    #: documented sync internally).  "module:name" entries match resolved
+    #: calls; bare names match any attribute/bare call of that name.
+    host_returning: Tuple[str, ...] = (
+        "repro.fl.server:evaluate",
+        "repro.core.fleet:fleet_total_remaining",
+        "repro.fl.client:client_update_seed",
+        "evaluate", "select", "episode_arrays", "unstacked",
+        "device_view", "to_devices", "cost_model",
+    )
+    #: attribute names that always denote host-side state when they appear
+    #: anywhere in an attribute chain (``cfg.n_devices``, ``self.cfg.seed``,
+    #: ``self.rng.integers``)
+    host_attrs: Tuple[str, ...] = ("cfg", "config", "rng")
+
+    # -- pytree-field-coverage ---------------------------------------------
+    fleet_module: str = "repro.core.fleet"
+    fleet_fields_name: str = "_ARRAY_FIELDS"
+    sharding_module: str = "repro.sharding.fleet"
+    sharding_rules_name: str = "FLEET_RULES"
+    summary_func: str = "repro.core.fleet:fleet_summary"
+    summary_exclusions_name: str = "SUMMARY_EXCLUDED_FIELDS"
+    checkpoint_module: str = "repro.checkpoint.io"
+    checkpoint_fields_name: str = "FLEET_CHECKPOINT_FIELDS"
+
+    # -- kernel-parity-contract --------------------------------------------
+    kernels_rel: str = "src/repro/kernels"
+    kernels_test_rel: str = "tests/test_kernels.py"
+
+    # -- frozen-reference-integrity ----------------------------------------
+    frozen_ledger_rel: str = "src/repro/analysis/frozen_refs.json"
+    #: (id, repo-relative file, top-level name, "function" | "class")
+    frozen_targets: Tuple[Tuple[str, str, str, str], ...] = (
+        ("sync-reference-loop", "src/repro/fl/simulation.py",
+         "_run_once_reference", "function"),
+        ("pre-factoring-selector", "tests/test_factored_state.py",
+         "_PreFactoringMarlSelector", "class"),
+    )
+
+
+@dataclasses.dataclass
+class Report:
+    root: str
+    rules: List[str]
+    findings: List[Finding]
+
+    @property
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.unsuppressed else 0
+
+    def to_json(self) -> dict:
+        return {
+            "version": 1,
+            "root": self.root,
+            "rules": list(self.rules),
+            "summary": {
+                "total": len(self.findings),
+                "suppressed": len(self.findings) - len(self.unsuppressed),
+                "unsuppressed": len(self.unsuppressed),
+            },
+            "findings": [f.to_json() for f in self.findings],
+        }
+
+    def render(self, verbose: bool = False) -> str:
+        lines = []
+        shown = self.findings if verbose else self.unsuppressed
+        for f in sorted(shown, key=lambda f: (f.file, f.line, f.rule)):
+            lines.append(f.render())
+        n_sup = len(self.findings) - len(self.unsuppressed)
+        lines.append(f"jaxlint: {len(self.unsuppressed)} unsuppressed "
+                     f"finding(s), {n_sup} suppressed, "
+                     f"{len(self.rules)} rule(s)")
+        return "\n".join(lines)
+
+
+def run_lint(config: LintConfig) -> Report:
+    from . import rules as rules_pkg
+    index = RepoIndex(config.repo_root, config.src_rel, config.package)
+    active = {name: fn for name, fn in rules_pkg.ALL_RULES.items()
+              if config.rules is None or name in config.rules}
+    findings: List[Finding] = list(index.parse_errors)
+    for name, rule in active.items():
+        findings.extend(rule(index, config))
+    findings = apply_pragmas(findings, index)
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return Report(root=os.path.abspath(config.repo_root),
+                  rules=sorted(active), findings=findings)
+
+
+def write_json(report: Report, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(report.to_json(), fh, indent=2, sort_keys=True)
+        fh.write("\n")

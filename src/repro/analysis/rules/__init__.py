@@ -1,0 +1,20 @@
+"""jaxlint rule registry.
+
+A rule is a callable ``rule(index: RepoIndex, config: LintConfig) ->
+list[Finding]``.  Register new rules here; ``--list-rules`` and the
+``rules=`` config filter read this mapping.
+"""
+from __future__ import annotations
+
+from . import (frozen_refs, host_sync, kernel_parity, pytree_coverage,
+               retrace)
+
+ALL_RULES = {
+    host_sync.RULE: host_sync.check,
+    retrace.RULE: retrace.check,
+    pytree_coverage.RULE: pytree_coverage.check,
+    kernel_parity.RULE: kernel_parity.check,
+    frozen_refs.RULE: frozen_refs.check,
+}
+
+__all__ = ["ALL_RULES"]

@@ -1,0 +1,127 @@
+"""Rule ``frozen-reference-integrity``.
+
+Two artifacts in this repo are *frozen*: the synchronous reference loop
+``simulation._run_once_reference`` (the bit-for-bit ground truth the
+engine parity test compares against) and the pre-factoring selector copy
+in ``tests/test_factored_state.py`` (the ground truth for the factored
+QMIX state refactor).  Editing either one silently moves the goalposts:
+the parity tests would then assert "engine == whatever the reference
+became", not "engine == the blessed behaviour".
+
+This rule pins each artifact's content hash (sha256 over its source
+span, decorators included, trailing whitespace stripped per line) in
+``src/repro/analysis/frozen_refs.json``.  Any edit fails the lint with
+instructions; when a change is *intended*, re-bless with::
+
+    python scripts/jaxlint.py --bless-frozen
+
+and say why in the commit message.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from ..core import Finding, RepoIndex
+
+RULE = "frozen-reference-integrity"
+
+
+def _find_span(path: str, name: str, kind: str) \
+        -> Optional[Tuple[int, int]]:
+    """Line span (1-based, inclusive, decorators included) of a top-level
+    function or class ``name`` in ``path``."""
+    try:
+        with open(path, encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+    except (OSError, SyntaxError):
+        return None
+    want = (ast.ClassDef,) if kind == "class" else (ast.FunctionDef,
+                                                    ast.AsyncFunctionDef)
+    for node in tree.body:
+        if isinstance(node, want) and node.name == name:
+            first = min([node.lineno]
+                        + [d.lineno for d in node.decorator_list])
+            return first, node.end_lineno or node.lineno
+    return None
+
+
+def hash_target(repo_root: str, relpath: str, name: str,
+                kind: str) -> Optional[str]:
+    path = os.path.join(repo_root, relpath)
+    span = _find_span(path, name, kind)
+    if span is None:
+        return None
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    chunk = "\n".join(l.rstrip() for l in lines[span[0] - 1:span[1]])
+    return hashlib.sha256(chunk.encode("utf-8")).hexdigest()
+
+
+def _ledger_path(config) -> str:
+    return os.path.join(config.repo_root, config.frozen_ledger_rel)
+
+
+def load_ledger(config) -> Optional[Dict[str, str]]:
+    try:
+        with open(_ledger_path(config), encoding="utf-8") as fh:
+            data = json.load(fh)
+        return dict(data.get("hashes", {}))
+    except (OSError, ValueError):
+        return None
+
+
+def bless(config) -> Dict[str, str]:
+    """Recompute every target hash and write the ledger."""
+    hashes: Dict[str, str] = {}
+    for tid, relpath, name, kind in config.frozen_targets:
+        h = hash_target(config.repo_root, relpath, name, kind)
+        if h is not None:
+            hashes[tid] = h
+    with open(_ledger_path(config), "w", encoding="utf-8") as fh:
+        json.dump({"version": 1, "hashes": hashes}, fh, indent=2,
+                  sort_keys=True)
+        fh.write("\n")
+    return hashes
+
+
+def check(index: RepoIndex, config) -> List[Finding]:
+    findings: List[Finding] = []
+    if not config.frozen_targets:
+        return findings
+    ledger = load_ledger(config)
+    ledger_rel = config.frozen_ledger_rel
+    if ledger is None:
+        findings.append(Finding(
+            rule=RULE, file=ledger_rel, line=1,
+            message="frozen-reference ledger missing — run "
+                    "'python scripts/jaxlint.py --bless-frozen' to create "
+                    "it"))
+        return findings
+    for tid, relpath, name, kind in config.frozen_targets:
+        current = hash_target(config.repo_root, relpath, name, kind)
+        if current is None:
+            findings.append(Finding(
+                rule=RULE, file=relpath, line=1,
+                message=f"frozen {kind} '{name}' ({tid}) not found — it is "
+                        "a blessed parity artifact; restore it or re-bless "
+                        "with --bless-frozen"))
+            continue
+        expected = ledger.get(tid)
+        if expected is None:
+            findings.append(Finding(
+                rule=RULE, file=ledger_rel, line=1,
+                message=f"ledger has no hash for '{tid}' — re-bless with "
+                        "--bless-frozen"))
+        elif current != expected:
+            findings.append(Finding(
+                rule=RULE, file=relpath, line=1,
+                message=f"frozen {kind} '{name}' ({tid}) was edited — "
+                        "parity references must not drift silently.  If "
+                        "the change is intended, run 'python "
+                        "scripts/jaxlint.py --bless-frozen' and explain "
+                        "why in the commit message"))
+    return findings

@@ -1,0 +1,451 @@
+"""Rule ``host-sync-in-hot-path``.
+
+Flags operations that force a device->host transfer (and therefore a
+blocking XLA sync) inside the per-round/per-event hot paths: ``.item()``,
+``.block_until_ready()``, ``jax.device_get(...)``, ``np.asarray(...)`` /
+``np.array(...)`` of device values, and ``float(...)``/``int(...)`` of
+device values.
+
+The hot set is NOT a grep: it is the call-graph closure of the configured
+roots (``RoundEngine`` methods, ``dual_selection_energy_step``,
+``ModelFamily.client_update``) plus every module-scope-jitted function —
+a sync inside those is either a per-event stall or a tracer leak.
+
+To keep the signal high, host-side values are tracked per function: names
+assigned from numpy-rooted expressions, literals, ``len()``-style
+builtins, ``jax.device_get`` results, or the configured
+``host_returning`` functions are host-local, and ``float``/``int``/
+``np.asarray`` over purely host-rooted expressions do not fire.  What
+remains is a genuine device pull — either batch it to one sync per event
+tick (``jax.device_get`` of everything the tick needs) or justify it with
+``# jaxlint: allow(host-sync-in-hot-path) -- <why>``.  ``device_get``
+itself still fires, deliberately: every batched pull carries its written
+justification.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..callgraph import build_call_graph, reachable_from, resolve_roots
+from ..core import Finding, FuncInfo, Module, RepoIndex
+
+RULE = "host-sync-in-hot-path"
+
+_SCALAR_ANN = {"int", "float", "bool", "str"}
+_CONTAINER_ANN = {"Sequence", "List", "Tuple", "Dict", "Optional",
+                  "Iterable", "Mapping", "Set", "FrozenSet"}
+
+_HOST_BUILTINS = {"len", "range", "int", "float", "bool", "str", "round",
+                  "sorted", "list", "tuple", "dict", "set", "min", "max",
+                  "abs", "sum", "enumerate", "zip", "isinstance", "getattr",
+                  "hasattr", "repr", "print", "id", "type"}
+_HOST_MODULES = {"time", "os", "math", "heapq", "json", "re", "sys",
+                 "dataclasses", "functools", "itertools", "collections"}
+_NUMPY_MODULES = {"numpy", "numpy.random"}
+
+
+def _module_root(mod: Module, name: str) -> str:
+    """The imported module a bare name refers to, or ''."""
+    return mod.module_aliases.get(name, "")
+
+
+def _is_numpy_name(mod: Module, name: str) -> bool:
+    return _module_root(mod, name) in _NUMPY_MODULES
+
+
+def _attr_chain_root(node: ast.AST):
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node
+
+
+def _is_module_attr(mod: Module, func: ast.AST, modnames: Set[str]) -> bool:
+    """True for ``alias.attr(...)`` where alias imports one of modnames."""
+    if not isinstance(func, ast.Attribute):
+        return False
+    root = _attr_chain_root(func)
+    return (isinstance(root, ast.Name)
+            and _module_root(mod, root.id) in modnames)
+
+
+def _is_host_returning(mod: Module, func: ast.AST, config) -> bool:
+    qual_entries = {e for e in config.host_returning if ":" in e}
+    bare_entries = {e for e in config.host_returning if ":" not in e}
+    if isinstance(func, ast.Name):
+        if func.id in bare_entries:
+            return True
+        imp = mod.from_imports.get(func.id)
+        if imp and f"{imp[0]}:{imp[1]}" in qual_entries:
+            return True
+    if isinstance(func, ast.Attribute):
+        if func.attr in bare_entries:
+            return True
+        base = func.value
+        if isinstance(base, ast.Name):
+            imp = mod.from_imports.get(base.id)
+            if imp and f"{imp[0]}.{imp[1]}:{func.attr}" in qual_entries:
+                return True
+            alias = _module_root(mod, base.id)
+            if alias and f"{alias}:{func.attr}" in qual_entries:
+                return True
+    return False
+
+
+def _host_annotation(mod: Module, ann: ast.expr) -> bool:
+    """Annotations that mean "this value lives on the host": scalar
+    builtins, typing containers, numpy arrays (numpy data IS host data —
+    converting it costs nothing)."""
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        head = ann.value.split("[")[0].strip().split(".")[-1]
+        return head in _SCALAR_ANN | _CONTAINER_ANN | {"ndarray"}
+    if isinstance(ann, ast.Name):
+        return ann.id in _SCALAR_ANN | _CONTAINER_ANN
+    if isinstance(ann, ast.Subscript):
+        return _host_annotation(mod, ann.value)
+    if isinstance(ann, ast.Attribute):
+        root = _attr_chain_root(ann)
+        if isinstance(root, ast.Name) and _is_numpy_name(mod, root.id):
+            return True
+        return ann.attr in _SCALAR_ANN | _CONTAINER_ANN
+    return False
+
+
+def _host_params(mod: Module, fn_node) -> Set[str]:
+    """Parameters whose annotation or literal default pins them host."""
+    out: Set[str] = set()
+    a = fn_node.args
+    pos = a.posonlyargs + a.args
+    defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+    for p, d in list(zip(pos, defaults)) + list(zip(a.kwonlyargs,
+                                                    a.kw_defaults)):
+        if p.annotation is not None and _host_annotation(mod, p.annotation):
+            out.add(p.arg)
+        elif isinstance(d, ast.Constant) and not isinstance(d.value, bytes):
+            out.add(p.arg)
+    return out
+
+
+def _host_globals(mod: Module) -> Set[str]:
+    """Module-level names bound to literal constants (STAGE_CHANNELS-style
+    tables) — host by construction."""
+    out: Set[str] = set()
+    for node in mod.tree.body:
+        targets = []
+        value = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        if value is None or not _is_literal(value):
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                out.add(t.id)
+    return out
+
+
+def _is_literal(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return all(_is_literal(e) for e in node.elts)
+    if isinstance(node, ast.Dict):
+        return all(_is_literal(e) for e in node.keys + node.values
+                   if e is not None)
+    if isinstance(node, ast.UnaryOp):
+        return _is_literal(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _is_literal(node.left) and _is_literal(node.right)
+    return False
+
+
+class _FuncScanner:
+    """Single ordered pass over one hot function's body: tracks host-local
+    names, emits findings for sync triggers."""
+
+    def __init__(self, info: FuncInfo, mod: Module, config,
+                 index: RepoIndex, findings: List[Finding]):
+        self.info = info
+        self.mod = mod
+        self.config = config
+        self.index = index
+        self.findings = findings
+        self.params = {p.arg for p in (info.node.args.posonlyargs
+                                       + info.node.args.args
+                                       + info.node.args.kwonlyargs)}
+        self.host: Set[str] = (_host_params(mod, info.node)
+                               | _host_globals(mod))
+        self.host_attrs = set(getattr(config, "host_attrs",
+                                      ("cfg", "config", "rng")))
+
+    # -- host-rootedness ---------------------------------------------------
+
+    def is_host(self, node: ast.AST) -> bool:
+        m = self.mod
+        if isinstance(node, (ast.Constant, ast.JoinedStr)):
+            return True
+        if isinstance(node, (ast.List, ast.Tuple, ast.Dict, ast.Set,
+                             ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.host
+        if isinstance(node, ast.Starred):
+            return self.is_host(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_host(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self.is_host(node.left) and self.is_host(node.right)
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_host(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return (self.is_host(node.left)
+                    and all(self.is_host(c) for c in node.comparators))
+        if isinstance(node, ast.IfExp):
+            return self.is_host(node.body) and self.is_host(node.orelse)
+        if isinstance(node, ast.Subscript):
+            return self.is_host(node.value)
+        if isinstance(node, ast.Attribute):
+            root = _attr_chain_root(node)
+            chain = {node.attr}
+            cur = node.value
+            while isinstance(cur, ast.Attribute):
+                chain.add(cur.attr)
+                cur = cur.value
+            if isinstance(cur, ast.Name):
+                chain.add(cur.id)
+            if chain & self.host_attrs:
+                return True              # cfg.*, self.cfg.*, self.rng.*
+            if isinstance(root, ast.Name):
+                if _is_numpy_name(m, root.id):
+                    return True          # np.float64, np.random, ...
+                if _module_root(m, root.id) in _HOST_MODULES:
+                    return True
+            return self.is_host(node.value)
+        if isinstance(node, ast.Call):
+            func = node.func
+            if isinstance(func, ast.Name) and func.id in _HOST_BUILTINS:
+                return True
+            if _is_module_attr(m, func, _NUMPY_MODULES | _HOST_MODULES):
+                return True              # np.mean(...), time.time(), ...
+            if _is_jax_device_get(m, func):
+                return True              # the pull result lives on host
+            if _is_host_returning(m, func, self.config):
+                return True
+            if self._scalar_return(func):
+                return True              # callee annotated -> int/float/...
+            # method on a host value: host_list.copy(), host_arr.sum(), ...
+            if isinstance(func, ast.Attribute) and self.is_host(func.value):
+                return True
+            return False
+        return False
+
+    def _scalar_return(self, func: ast.AST) -> bool:
+        """True when the called repo function's return annotation pins the
+        result to a host scalar (``-> int``/``-> float``/...)."""
+        infos: List[FuncInfo] = []
+        if isinstance(func, ast.Name):
+            imp = self.mod.from_imports.get(func.id)
+            if imp:
+                hit = self.index.functions.get(f"{imp[0]}:{imp[1]}")
+                if hit:
+                    infos.append(hit)
+            hit = self.index.functions.get(f"{self.mod.modname}:{func.id}")
+            if hit:
+                infos.append(hit)
+        elif isinstance(func, ast.Attribute):
+            infos = [f for f in self.index.functions.values()
+                     if f.name == func.attr]
+        if not infos:
+            return False
+        anns = [getattr(f.node, "returns", None) for f in infos]
+        return all(isinstance(a, ast.Name) and a.id in _SCALAR_ANN
+                   for a in anns)
+
+    # -- traversal ---------------------------------------------------------
+
+    def scan(self) -> None:
+        for stmt in self.info.node.body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs share the env; their own params are host glue
+            # (device data reaches closures through captured names)
+            for p in (stmt.args.posonlyargs + stmt.args.args
+                      + stmt.args.kwonlyargs):
+                self.host.add(p.arg)
+            for s in stmt.body:
+                self._stmt(s)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._expr(stmt.value)
+            host_val = self.is_host(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, host_val)
+            return
+        if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                self._expr(stmt.value)
+                if isinstance(stmt, ast.AnnAssign):
+                    self._bind(stmt.target, self.is_host(stmt.value))
+            return
+        if isinstance(stmt, ast.For):
+            self._expr(stmt.iter)
+            self._bind(stmt.target, self._iter_is_host(stmt.iter))
+            for s in stmt.body + stmt.orelse:
+                self._stmt(s)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._expr(stmt.test)
+            for s in stmt.body + stmt.orelse:
+                self._stmt(s)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._expr(item.context_expr)
+            for s in stmt.body:
+                self._stmt(s)
+            return
+        if isinstance(stmt, ast.Try):
+            for s in (stmt.body + stmt.orelse + stmt.finalbody
+                      + [h for hh in stmt.handlers for h in hh.body]):
+                self._stmt(s)
+            return
+        if isinstance(stmt, (ast.Expr, ast.Return)) and stmt.value is not None:
+            self._expr(stmt.value)
+            return
+        # other statements (pass, break, raise, ...): check embedded exprs
+        for node in ast.iter_child_nodes(stmt):
+            if isinstance(node, ast.expr):
+                self._expr(node)
+
+    def _bind(self, target: ast.expr, host_val: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.host.add if host_val else self.host.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind(el, host_val)
+
+    def _iter_is_host(self, it: ast.expr) -> bool:
+        # iterating a bare parameter: callers pass host sequences into
+        # these loops; a device array would be sliced, not iterated
+        if isinstance(it, ast.Name) and it.id in self.params:
+            return True
+        return self.is_host(it)
+
+    def _expr(self, node: ast.expr) -> None:
+        # comprehension targets over host iterables, and lambda params,
+        # are host for the duration of this expression
+        added: List[str] = []
+
+        def bind(name: str) -> None:
+            if name not in self.host:
+                self.host.add(name)
+                added.append(name)
+
+        for n in ast.walk(node):
+            if isinstance(n, (ast.ListComp, ast.SetComp, ast.DictComp,
+                              ast.GeneratorExp)):
+                for gen in n.generators:
+                    if self._iter_is_host(gen.iter):
+                        for t in ast.walk(gen.target):
+                            if isinstance(t, ast.Name):
+                                bind(t.id)
+            elif isinstance(n, ast.Lambda):
+                for p in (n.args.posonlyargs + n.args.args
+                          + n.args.kwonlyargs):
+                    bind(p.arg)
+        for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+            self._check_call(call)
+        for name in added:
+            self.host.discard(name)
+
+    # -- triggers ----------------------------------------------------------
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(Finding(
+            rule=RULE, file=self.mod.relpath, line=node.lineno,
+            message=f"{what} in hot path "
+                    f"({self.info.qualname.split(':')[-1]})"))
+
+    def _arg_is_checkable(self, arg: ast.expr) -> bool:
+        """Bare parameters are not flagged: ``float(lr)`` inside
+        ``f(lr: ...)`` is the caller's sync if it is one at all — charging
+        it here would force a pragma on every scalar-coercion helper."""
+        if isinstance(arg, ast.Name) and arg.id in self.params:
+            return False
+        return not self.is_host(arg)
+
+    def _check_call(self, call: ast.Call) -> None:
+        func = call.func
+        m = self.mod
+        if isinstance(func, ast.Attribute):
+            if func.attr == "item" and not call.args:
+                self._flag(call, ".item() forces a device sync")
+                return
+            if func.attr == "block_until_ready":
+                self._flag(call, ".block_until_ready() blocks on the device")
+                return
+            if _is_jax_device_get(m, func):
+                self._flag(call, "jax.device_get pulls device values "
+                                 "(one batched pull per event tick needs a "
+                                 "written reason)")
+                return
+            if (func.attr in ("asarray", "array")
+                    and isinstance(_attr_chain_root(func), ast.Name)
+                    and _is_numpy_name(m,
+                                       _attr_chain_root(func).id)):
+                if call.args and self._arg_is_checkable(call.args[0]):
+                    self._flag(call, f"np.{func.attr}() of a device value "
+                                     "forces a sync")
+                return
+        if isinstance(func, ast.Name) and func.id in ("float", "int"):
+            if len(call.args) == 1 and self._arg_is_checkable(call.args[0]):
+                self._flag(call, f"{func.id}() of a device value forces "
+                                 "a sync")
+
+
+def _is_jax_device_get(mod: Module, func: ast.AST) -> bool:
+    if not (isinstance(func, ast.Attribute) and func.attr == "device_get"):
+        return False
+    root = _attr_chain_root(func)
+    return (isinstance(root, ast.Name)
+            and mod.module_aliases.get(root.id, "") == "jax")
+
+
+def _jitted_functions(index: RepoIndex) -> Set[str]:
+    """Functions jitted at module scope (decorator or module-level alias):
+    a host sync inside them is a tracer leak, not just a stall."""
+    out: Set[str] = set()
+    for mod in index.modules.values():
+        for alias, (target, _) in mod.jit_aliases.items():
+            hit = index.functions.get(f"{mod.modname}:{target}")
+            if hit:
+                out.add(hit.qualname)
+        for info in index.functions_in(mod.modname):
+            node = info.node
+            for deco in getattr(node, "decorator_list", ()):
+                expr = deco.func if isinstance(deco, ast.Call) else deco
+                if (isinstance(expr, ast.Attribute) and expr.attr == "jit"):
+                    out.add(info.qualname)
+                if (isinstance(deco, ast.Call)
+                        and isinstance(deco.func, ast.Attribute)
+                        and deco.func.attr == "partial" and deco.args
+                        and isinstance(deco.args[0], ast.Attribute)
+                        and deco.args[0].attr == "jit"):
+                    out.add(info.qualname)
+    return out
+
+
+def check(index: RepoIndex, config) -> List[Finding]:
+    graph = build_call_graph(index)
+    roots = resolve_roots(index, config.hot_roots)
+    hot = reachable_from(graph, roots) | _jitted_functions(index)
+    findings: List[Finding] = []
+    for qual in sorted(hot):
+        info = index.functions[qual]
+        _FuncScanner(info, index.modules[info.module], config, index,
+                     findings).scan()
+    return findings

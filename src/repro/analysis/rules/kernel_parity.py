@@ -1,0 +1,141 @@
+"""Rule ``kernel-parity-contract``.
+
+Every Pallas kernel package under ``src/repro/kernels/`` ships two
+implementations of the same math: ``ops.py`` (the accelerated entry
+point, with tuning knobs like block sizes and ``interpret``) and
+``ref.py`` (the pure-jnp reference the parity tests compare against).
+This rule enforces the contract structurally:
+
+* both files exist per kernel package;
+* public functions pair up by base name (``rmsnorm_ref`` ↔
+  ``rmsnorm_op``, ``attention_ref`` ↔ ``flash_attention``) with the same
+  number of required positional parameters, and every optional/kw-only
+  parameter of the *ref* also accepted by the *op* (the op may add
+  tuning-only knobs; the ref may not have semantics the op lacks);
+* ``tests/test_kernels.py`` references at least one public name from
+  each side, so the parity test actually exercises both paths.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+from ..core import Finding, RepoIndex
+
+RULE = "kernel-parity-contract"
+
+
+def _public_functions(path: str) -> Optional[Dict[str, ast.FunctionDef]]:
+    try:
+        with open(path, encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+    except (OSError, SyntaxError):
+        return None
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef) and not n.name.startswith("_")}
+
+
+def _sig(fn: ast.FunctionDef) -> Tuple[int, List[str]]:
+    """(required positional count, optional/kw-only parameter names)."""
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    n_required = len(pos) - len(a.defaults)
+    optional = [p.arg for p in pos[n_required:]] + [p.arg for p in
+                                                    a.kwonlyargs]
+    return n_required, optional
+
+
+def _base(name: str) -> str:
+    return re.sub(r"(_ref|_op)$", "", name)
+
+
+def _pair(ref_name: str, op_names) -> Optional[str]:
+    """Match a ref function to its op by base-name containment."""
+    rb = _base(ref_name)
+    for op in op_names:
+        ob = _base(op)
+        if rb == ob or rb in ob or ob in rb:
+            return op
+    return None
+
+
+def check(index: RepoIndex, config) -> List[Finding]:
+    findings: List[Finding] = []
+    kdir = os.path.join(config.repo_root, config.kernels_rel)
+    if not os.path.isdir(kdir):
+        return findings
+    test_path = os.path.join(config.repo_root, config.kernels_test_rel)
+    test_words = set()
+    if os.path.isfile(test_path):
+        with open(test_path, encoding="utf-8") as fh:
+            test_words = set(re.findall(r"\w+", fh.read()))
+    packages = sorted(
+        d for d in os.listdir(kdir)
+        if os.path.isdir(os.path.join(kdir, d)) and not d.startswith("_"))
+    for pkg in packages:
+        rel = f"{config.kernels_rel}/{pkg}"
+        ops_path = os.path.join(kdir, pkg, "ops.py")
+        ref_path = os.path.join(kdir, pkg, "ref.py")
+        missing = [n for n, p in (("ops.py", ops_path), ("ref.py", ref_path))
+                   if not os.path.isfile(p)]
+        if missing:
+            findings.append(Finding(
+                rule=RULE, file=rel, line=1,
+                message=f"kernel package '{pkg}' missing "
+                        f"{' and '.join(missing)}"))
+            continue
+        ops = _public_functions(ops_path)
+        refs = _public_functions(ref_path)
+        if ops is None or refs is None:
+            findings.append(Finding(
+                rule=RULE, file=rel, line=1,
+                message=f"kernel package '{pkg}' ops/ref not parseable"))
+            continue
+        if not refs:
+            findings.append(Finding(
+                rule=RULE, file=f"{rel}/ref.py", line=1,
+                message=f"'{pkg}' ref.py exports no public functions"))
+        for ref_name, ref_fn in sorted(refs.items()):
+            op_name = _pair(ref_name, ops)
+            if op_name is None:
+                findings.append(Finding(
+                    rule=RULE, file=f"{rel}/ref.py", line=ref_fn.lineno,
+                    message=f"{ref_name} has no matching public function "
+                            "in ops.py"))
+                continue
+            ref_req, ref_opt = _sig(ref_fn)
+            op_req, op_opt = _sig(ops[op_name])
+            if ref_req != op_req:
+                findings.append(Finding(
+                    rule=RULE, file=f"{rel}/ops.py",
+                    line=ops[op_name].lineno,
+                    message=f"{op_name} takes {op_req} required args but "
+                            f"{ref_name} takes {ref_req} — signatures "
+                            "drifted"))
+            lost = sorted(set(ref_opt) - set(op_opt))
+            if lost:
+                findings.append(Finding(
+                    rule=RULE, file=f"{rel}/ops.py",
+                    line=ops[op_name].lineno,
+                    message=f"{op_name} missing optional params {lost} "
+                            f"that {ref_name} accepts"))
+        # the parity test must reference both sides of each package
+        if test_words:
+            if not any(n in test_words for n in ops):
+                findings.append(Finding(
+                    rule=RULE, file=config.kernels_test_rel, line=1,
+                    message=f"no ops.py function of '{pkg}' referenced in "
+                            f"{os.path.basename(test_path)}"))
+            if not any(n in test_words for n in refs):
+                findings.append(Finding(
+                    rule=RULE, file=config.kernels_test_rel, line=1,
+                    message=f"no ref.py function of '{pkg}' referenced in "
+                            f"{os.path.basename(test_path)}"))
+        elif not os.path.isfile(test_path):
+            findings.append(Finding(
+                rule=RULE, file=config.kernels_test_rel, line=1,
+                message=f"kernel parity test file "
+                        f"{config.kernels_test_rel} missing"))
+    return findings

@@ -1,0 +1,232 @@
+"""Rule ``pytree-field-coverage``.
+
+The repo's sharded/checkpointed runs depend on four hand-maintained
+views of ``FleetState`` staying field-aligned:
+
+* the ``_ARRAY_FIELDS`` tuple that drives ``tree_flatten`` /
+  ``tree_unflatten``;
+* the ``sharding/fleet.py`` name→PartitionSpec rule table (every array
+  field must match some rule pattern);
+* ``fleet_summary``'s input set — every array field is either read by
+  the summary or named in ``SUMMARY_EXCLUDED_FIELDS`` with intent;
+* the checkpoint field tuple in ``checkpoint/io.py``.
+
+"Added a field, forgot one site" breaks sharded or restored runs
+silently (the new field silently replicates, or silently drops from
+checkpoints).  This rule makes the drift a lint failure.
+
+Generically (works on fixture mini-repos too): for every class
+registered with ``jax.tree_util.register_pytree_node_class``, each
+dataclass field must appear in the class's ``tree_flatten`` method body
+or in the aux-data expression.  The repo-specific cross-file checks
+activate only when the configured modules exist in the index.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Sequence, Set, Tuple
+
+from ..core import Finding, Module, RepoIndex
+
+RULE = "pytree-field-coverage"
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, int]]:
+    out = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                          ast.Name):
+            out.append((node.target.id, node.lineno))
+    return out
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    """Every Name id, attribute name, and string constant under node."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+        elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.add(n.value)
+    return out
+
+
+def _registered_pytree_classes(mod: Module) -> List[ast.ClassDef]:
+    out = []
+    for node in mod.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for deco in node.decorator_list:
+            expr = deco.func if isinstance(deco, ast.Call) else deco
+            names = _names_in(expr)
+            if "register_pytree_node_class" in names:
+                out.append(node)
+    return out
+
+
+def _module_assign(mod: Module, name: str) -> Optional[ast.expr]:
+    """RHS of a module-level ``NAME = ...`` / ``NAME: T = ...``."""
+    for node in mod.tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == name):
+            return node.value
+        if (isinstance(node, ast.AnnAssign)
+                and isinstance(node.target, ast.Name)
+                and node.target.id == name and node.value is not None):
+            return node.value
+    return None
+
+
+def _module_tuple_const(mod: Module, name: str) -> Optional[List[str]]:
+    """Value of a module-level ``NAME = ("a", "b", ...)`` assignment."""
+    value = _module_assign(mod, name)
+    if not isinstance(value, (ast.Tuple, ast.List)):
+        return None
+    vals = []
+    for el in value.elts:
+        if isinstance(el, ast.Constant) and isinstance(el.value, str):
+            vals.append(el.value)
+        else:
+            return None
+    return vals
+
+
+def _flatten_coverage(index: RepoIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules.values():
+        for cls in _registered_pytree_classes(mod):
+            flatten = unflatten = None
+            for node in cls.body:
+                if isinstance(node, ast.FunctionDef):
+                    if node.name == "tree_flatten":
+                        flatten = node
+                    elif node.name == "tree_unflatten":
+                        unflatten = node
+            if flatten is None or unflatten is None:
+                findings.append(Finding(
+                    rule=RULE, file=mod.relpath, line=cls.lineno,
+                    message=f"pytree class {cls.name} missing "
+                            "tree_flatten/tree_unflatten"))
+                continue
+            # names mentioned anywhere in flatten/unflatten, including the
+            # module-level field tuples they reference
+            covered = _names_in(flatten) | _names_in(unflatten)
+            for ref in list(covered):
+                tup = _module_tuple_const(mod, ref)
+                if tup:
+                    covered.update(tup)
+            for field, lineno in _dataclass_fields(cls):
+                if field not in covered:
+                    findings.append(Finding(
+                        rule=RULE, file=mod.relpath, line=lineno,
+                        message=f"{cls.name}.{field} not covered by "
+                                "tree_flatten/tree_unflatten — sharding and "
+                                "jit will silently drop it"))
+    return findings
+
+
+def _fleet_cross_checks(index: RepoIndex, config) -> List[Finding]:
+    findings: List[Finding] = []
+    fleet_mod = index.modules.get(config.fleet_module)
+    if fleet_mod is None:
+        return findings
+    fields = _module_tuple_const(fleet_mod, config.fleet_fields_name)
+    if fields is None:
+        findings.append(Finding(
+            rule=RULE, file=fleet_mod.relpath, line=1,
+            message=f"{config.fleet_fields_name} tuple not found in "
+                    f"{config.fleet_module}"))
+        return findings
+
+    # (a) sharding rule table: every array field must match some pattern
+    shard_mod = index.modules.get(config.sharding_module)
+    if shard_mod is not None:
+        patterns = _rule_table_patterns(shard_mod, config.sharding_rules_name)
+        if patterns is None:
+            findings.append(Finding(
+                rule=RULE, file=shard_mod.relpath, line=1,
+                message=f"{config.sharding_rules_name} not found or not "
+                        "statically readable"))
+        else:
+            for field in fields:
+                if not any(re.fullmatch(p, field) for p in patterns):
+                    findings.append(Finding(
+                        rule=RULE, file=shard_mod.relpath, line=1,
+                        message=f"field '{field}' matches no pattern in "
+                                f"{config.sharding_rules_name} — it would "
+                                "shard as unspecified"))
+
+    # (b) fleet_summary reads every field or excludes it explicitly
+    modname, _, fname = config.summary_func.partition(":")
+    summary = index.functions.get(f"{modname}:{fname}")
+    if summary is not None:
+        read = _names_in(summary.node)
+        summary_mod = index.modules[summary.module]
+        excluded = _module_tuple_const(summary_mod,
+                                       config.summary_exclusions_name)
+        if excluded is None:
+            findings.append(Finding(
+                rule=RULE, file=summary_mod.relpath,
+                line=summary.node.lineno,
+                message=f"{config.summary_exclusions_name} tuple missing — "
+                        "bless intentionally-unsummarised fields explicitly"))
+            excluded = []
+        for field in fields:
+            if field not in read and field not in excluded:
+                findings.append(Finding(
+                    rule=RULE, file=summary_mod.relpath,
+                    line=summary.node.lineno,
+                    message=f"field '{field}' neither read by {fname} nor "
+                            f"listed in {config.summary_exclusions_name}"))
+        for field in excluded:
+            if field not in fields:
+                findings.append(Finding(
+                    rule=RULE, file=summary_mod.relpath,
+                    line=summary.node.lineno,
+                    message=f"{config.summary_exclusions_name} names "
+                            f"unknown field '{field}'"))
+
+    # (c) checkpoint field tuple equals the pytree field tuple
+    ckpt_mod = index.modules.get(config.checkpoint_module)
+    if ckpt_mod is not None:
+        ckpt_fields = _module_tuple_const(ckpt_mod,
+                                          config.checkpoint_fields_name)
+        if ckpt_fields is None:
+            findings.append(Finding(
+                rule=RULE, file=ckpt_mod.relpath, line=1,
+                message=f"{config.checkpoint_fields_name} tuple missing "
+                        f"from {config.checkpoint_module}"))
+        elif set(ckpt_fields) != set(fields):
+            missing = sorted(set(fields) - set(ckpt_fields))
+            extra = sorted(set(ckpt_fields) - set(fields))
+            findings.append(Finding(
+                rule=RULE, file=ckpt_mod.relpath, line=1,
+                message=f"{config.checkpoint_fields_name} out of sync with "
+                        f"{config.fleet_fields_name}: missing={missing} "
+                        f"extra={extra}"))
+    return findings
+
+
+def _rule_table_patterns(mod: Module,
+                         name: str) -> Optional[List[str]]:
+    """Regex patterns from ``NAME = ((r"pat", spec), ...)``."""
+    value = _module_assign(mod, name)
+    if not isinstance(value, (ast.Tuple, ast.List)):
+        return None
+    pats = []
+    for el in value.elts:
+        if (isinstance(el, (ast.Tuple, ast.List)) and el.elts
+                and isinstance(el.elts[0], ast.Constant)
+                and isinstance(el.elts[0].value, str)):
+            pats.append(el.elts[0].value)
+        else:
+            return None
+    return pats
+
+
+def check(index: RepoIndex, config) -> List[Finding]:
+    return _flatten_coverage(index) + _fleet_cross_checks(index, config)

@@ -1,0 +1,219 @@
+"""Rule ``retrace-hazard``.
+
+Two ways this repo has historically re-traced per call:
+
+1. ``jax.jit(...)`` (or ``functools.partial(jax.jit, ...)``) invoked
+   inside a function body or loop.  Every call builds a fresh jitted
+   wrapper with an empty cache, so every call re-traces.  Jit wrappers
+   belong at module scope or in an explicit cache (``self._jit_cache``);
+   when the in-body jit IS cached, say so with
+   ``# jaxlint: allow(retrace-hazard) -- cached in self._jit_cache``.
+
+2. ``static_argnames`` naming a parameter that some call site passes an
+   array: each distinct array *value* hashes to a new cache entry, so
+   the cache grows without bound and every new value re-traces.  The
+   check resolves call sites of the jitted function across the repo and
+   flags arguments to static params that are array-valued expressions
+   (``jnp.*`` / ``np.*`` calls, or names bound from them).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core import Finding, Module, RepoIndex
+
+RULE = "retrace-hazard"
+
+_ARRAY_MODULES = {"jax", "jax.numpy", "numpy"}
+
+
+def _is_jit_expr(mod: Module, call: ast.Call) -> bool:
+    """True when ``call`` is ``jax.jit(...)`` or
+    ``functools.partial(jax.jit, ...)``."""
+    func = call.func
+    if isinstance(func, ast.Attribute) and func.attr == "jit":
+        root = func.value
+        if (isinstance(root, ast.Name)
+                and mod.module_aliases.get(root.id, root.id) == "jax"):
+            return True
+    if isinstance(func, ast.Name):
+        if mod.from_imports.get(func.id) == ("jax", "jit"):
+            return True
+    # functools.partial(jax.jit, ...)
+    if (isinstance(func, ast.Attribute) and func.attr == "partial"
+            and call.args):
+        first = call.args[0]
+        if (isinstance(first, ast.Attribute) and first.attr == "jit"
+                and isinstance(first.value, ast.Name)
+                and mod.module_aliases.get(first.value.id,
+                                           first.value.id) == "jax"):
+            return True
+    return False
+
+
+def _jit_calls_in_function_bodies(index: RepoIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules.values():
+        for info in index.functions_in(mod.modname):
+            # walk the BODY only: the function's own decorators run at
+            # module/class scope, where jax.jit belongs
+            for node in (n for stmt in info.node.body
+                         for n in ast.walk(stmt)):
+                if isinstance(node, ast.Call) and _is_jit_expr(mod, node):
+                    where = info.qualname.split(":")[-1]
+                    findings.append(Finding(
+                        rule=RULE, file=mod.relpath, line=node.lineno,
+                        message=f"jax.jit constructed inside {where}() — "
+                                "each call re-traces unless the wrapper is "
+                                "cached; move it to module scope or an "
+                                "explicit cache"))
+                # @jax.jit on a def nested inside a function body is the
+                # same hazard: the decorator runs on every enclosing call.
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for deco in node.decorator_list:
+                        d = deco.func if isinstance(deco, ast.Call) else deco
+                        if (isinstance(d, ast.Attribute) and d.attr == "jit"
+                                and isinstance(d.value, ast.Name)
+                                and mod.module_aliases.get(
+                                    d.value.id, d.value.id) == "jax"):
+                            findings.append(Finding(
+                                rule=RULE, file=mod.relpath,
+                                line=deco.lineno,
+                                message=f"@jax.jit on a def nested inside "
+                                        f"{info.name}() re-jits per call"))
+    # module scope: a jit constructed inside a module-level loop
+    for mod in index.modules.values():
+        for top in mod.tree.body:
+            if isinstance(top, (ast.For, ast.While)):
+                for node in ast.walk(top):
+                    if isinstance(node, ast.Call) and _is_jit_expr(mod, node):
+                        findings.append(Finding(
+                            rule=RULE, file=mod.relpath, line=node.lineno,
+                            message="jax.jit constructed inside a "
+                                    "module-level loop"))
+    return findings
+
+
+# -- static_argnames vs array-valued call sites -----------------------------
+
+def _static_names_of(call: ast.Call) -> Tuple[str, ...]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums") \
+                and kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+    return ()
+
+
+def _collect_static_jits(index: RepoIndex) \
+        -> Dict[str, Tuple[str, Tuple[str, ...], List[str]]]:
+    """callable-name -> (defining module, static names, param order).
+
+    Covers module-level aliases (``f_jit = jax.jit(f, static_argnames=...)``)
+    and ``@partial(jax.jit, static_argnames=...)`` decorated defs.
+    """
+    out: Dict[str, Tuple[str, Tuple[str, ...], List[str]]] = {}
+
+    def params_of(fn_node) -> List[str]:
+        a = fn_node.args
+        return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+    for mod in index.modules.values():
+        for alias, (target, call) in mod.jit_aliases.items():
+            statics = _static_names_of(call)
+            if not statics:
+                continue
+            hit = index.functions.get(f"{mod.modname}:{target}")
+            if hit:
+                out[alias] = (mod.modname, statics, params_of(hit.node))
+        for info in index.functions_in(mod.modname):
+            for deco in info.node.decorator_list:
+                if isinstance(deco, ast.Call) and _is_jit_expr(mod, deco):
+                    statics = _static_names_of(deco)
+                    if statics:
+                        out[info.name] = (mod.modname, statics,
+                                          params_of(info.node))
+    return out
+
+
+def _is_arrayish(mod: Module, node: ast.expr,
+                 array_names: Set[str]) -> bool:
+    """Heuristic: expression clearly produces an array."""
+    if isinstance(node, ast.Name):
+        return node.id in array_names
+    if isinstance(node, ast.Call):
+        func = node.func
+        root = func
+        while isinstance(root, ast.Attribute):
+            root = root.value
+        if isinstance(root, ast.Name):
+            target = mod.module_aliases.get(root.id, "")
+            if target in _ARRAY_MODULES:
+                return True
+    if isinstance(node, (ast.Subscript, ast.Attribute)):
+        return _is_arrayish(mod, node.value, array_names)
+    return False
+
+
+def _array_locals(mod: Module, fn_node) -> Set[str]:
+    """Names in ``fn_node`` bound from jnp./np.-rooted expressions."""
+    names: Set[str] = set()
+    for stmt in ast.walk(fn_node):
+        if isinstance(stmt, ast.Assign) and \
+                _is_arrayish(mod, stmt.value, names):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+    return names
+
+
+def _static_argnames_misuse(index: RepoIndex) -> List[Finding]:
+    jits = _collect_static_jits(index)
+    if not jits:
+        return []
+    findings: List[Finding] = []
+    for mod in index.modules.values():
+        for info in index.functions_in(mod.modname):
+            arr_names: Optional[Set[str]] = None
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = None
+                if isinstance(node.func, ast.Name):
+                    name = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    name = node.func.attr
+                if name not in jits:
+                    continue
+                def_mod, statics, params = jits[name]
+                if arr_names is None:
+                    arr_names = _array_locals(mod, info.node)
+                # positional args mapped onto the param order
+                for i, arg in enumerate(node.args):
+                    if i < len(params) and params[i] in statics and \
+                            _is_arrayish(mod, arg, arr_names):
+                        findings.append(Finding(
+                            rule=RULE, file=mod.relpath, line=node.lineno,
+                            message=f"array passed positionally to static "
+                                    f"param '{params[i]}' of {name} — every "
+                                    "distinct value re-traces"))
+                for kw in node.keywords:
+                    if kw.arg in statics and \
+                            _is_arrayish(mod, kw.value, arr_names):
+                        findings.append(Finding(
+                            rule=RULE, file=mod.relpath, line=node.lineno,
+                            message=f"array passed to static param "
+                                    f"'{kw.arg}' of {name} — every distinct "
+                                    "value re-traces"))
+    return findings
+
+
+def check(index: RepoIndex, config) -> List[Finding]:
+    return _jit_calls_in_function_bodies(index) + \
+        _static_argnames_misuse(index)

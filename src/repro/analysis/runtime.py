@@ -1,0 +1,74 @@
+"""Runtime compile/execution guards — the dynamic complement to the
+static ``retrace-hazard`` rule.
+
+The static rule catches jit-in-a-loop shapes; this module catches the
+hazards only visible at runtime (a static arg that churns, a pytree
+whose structure varies per call) by asserting on actual compile counts:
+
+* :func:`compile_guard` — context manager that snapshots the compile
+  caches of the given jitted functions (via ``_cache_size()``) and/or a
+  ``COUNTERS``-style dict (``{"compiles": int, ...}``, e.g.
+  ``repro.fl.batch.COUNTERS``) and asserts at exit that no more than
+  ``max_new`` new compilations happened inside the block::
+
+      with compile_guard(dual_selection_energy_step_jit, max_new=1):
+          for _ in range(20):
+              step(...)          # same shapes -> one executable
+
+* :func:`cache_size` — best-effort compile-cache size of one jitted
+  function (0 when the wrapper does not expose it).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Iterator, Optional
+
+
+def cache_size(jitted_fn) -> int:
+    """Number of compiled executables cached on a ``jax.jit`` wrapper.
+
+    Best-effort: returns 0 for wrappers that do not expose
+    ``_cache_size`` (older jax, non-jit callables) so guards degrade to
+    counter-only checks rather than erroring.
+    """
+    probe = getattr(jitted_fn, "_cache_size", None)
+    if callable(probe):
+        try:
+            return int(probe())
+        except Exception:
+            return 0
+    return 0
+
+
+@contextlib.contextmanager
+def compile_guard(*jitted_fns, counters: Optional[Dict[str, int]] = None,
+                  counter_key: str = "compiles",
+                  max_new: int = 1) -> Iterator[None]:
+    """Assert that at most ``max_new`` NEW compilations happen inside
+    the ``with`` block, summed over ``jitted_fns`` cache growth and the
+    optional ``counters[counter_key]`` delta.
+
+    Raises ``AssertionError`` naming the offending sources, so a test
+    failure reads as "this step retraced", not a bare count mismatch.
+    """
+    before_caches = [cache_size(f) for f in jitted_fns]
+    before_counter = counters.get(counter_key, 0) if counters is not None \
+        else 0
+    yield
+    new = 0
+    offenders = []
+    for fn, before in zip(jitted_fns, before_caches):
+        grown = cache_size(fn) - before
+        if grown > 0:
+            new += grown
+            name = getattr(fn, "__name__", None) or repr(fn)
+            offenders.append(f"{name} (+{grown} executable(s))")
+    if counters is not None:
+        grown = counters.get(counter_key, 0) - before_counter
+        if grown > 0:
+            new += grown
+            offenders.append(f"counters['{counter_key}'] (+{grown})")
+    assert new <= max_new, (
+        f"compile_guard: {new} new compilation(s) inside the guarded block "
+        f"(allowed {max_new}): {', '.join(offenders)} — a static arg or "
+        "pytree structure is churning; see docs/ANALYSIS.md#retrace-hazard")

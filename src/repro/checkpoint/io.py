@@ -24,6 +24,15 @@ import zlib
 
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
+# Leaf paths a FleetState checkpoint carries, in pytree order — kept in
+# lockstep with ``repro.core.fleet._ARRAY_FIELDS`` (set-equality enforced
+# by the ``pytree-field-coverage`` jaxlint rule, so a field added to the
+# fleet cannot silently drop out of checkpoints).
+FLEET_CHECKPOINT_FIELDS = ("compute", "p_train", "p_com", "bandwidth",
+                           "battery", "remaining", "data_size",
+                           "mode_compute", "mode_power", "alive",
+                           "busy_until")
+
 
 def _compress(raw: bytes) -> bytes:
     if zstd is not None:

@@ -313,6 +313,7 @@ def fleet_charge(fleet: FleetState, e_need: Array, active: Array
 
 
 def fleet_total_remaining(fleet: FleetState) -> float:
+    # jaxlint: allow(host-sync-in-hot-path) -- the documented single-sync accessor; hot paths batch their pulls via device_get instead
     return float(fleet.remaining.sum())
 
 
@@ -330,6 +331,7 @@ def fleet_connect(fleet: FleetState, start: int,
         busy_until=xp.where(joins, _aslike(fleet, now), fleet.busy_until))
 
 
+# jaxlint: allow(host-sync-in-hot-path) -- host-side dispatch mask by contract; the async engine keeps authoritative float64 clocks on host
 def fleet_idle(fleet: FleetState, now: float) -> np.ndarray:
     """[n] bool host-side mask: alive and not mid-task at sim time ``now`` —
     the dispatchable set for the event-driven engine."""
@@ -345,6 +347,7 @@ def fleet_set_busy(fleet: FleetState, indices, until) -> FleetState:
     disabled), whose resolution degrades at large sim times.  The async
     engine therefore keeps its authoritative clocks host-side in float64
     and treats this field as an observability mirror."""
+    # jaxlint: allow(host-sync-in-hot-path) -- observability-mirror update: numpy round-trip by design, host clocks are authoritative
     busy = np.asarray(fleet.busy_until).copy()
     busy[np.asarray(indices, np.int64)] = until
     return fleet.replace(busy_until=_aslike(fleet, busy))
@@ -478,6 +481,15 @@ def fleet_summary(fleet: FleetState, model_sizes, model_fractions,
     ])
     out = xp.concatenate([hist_b, hist_c, afford_frac, totals])
     return out.astype(jnp.float32 if xp is jnp else np.float32)
+
+
+# Array fields :func:`fleet_summary` does NOT read directly — blessed for
+# the ``pytree-field-coverage`` jaxlint rule.  p_train/p_com/bandwidth
+# enter the summary only through the fleet_affordability cost kernel;
+# mode_power prices energy rather than capability; busy_until is the async
+# engine's observability mirror (its authoritative clocks live host-side).
+SUMMARY_EXCLUDED_FIELDS = ("p_train", "p_com", "bandwidth", "mode_power",
+                           "busy_until")
 
 
 # Jitted entry points for the jax backend.  local_epochs/batch_size trace as

@@ -56,7 +56,9 @@ class QmixLearner:
         self.target = jax.tree.map(jnp.copy, self.params)
         self.opt = adamw_init(self.params)
         self.updates = 0
+        # jaxlint: allow(retrace-hazard) -- jitted once per learner instance; both live for the whole run
         self._act = jax.jit(functools.partial(_act, cfg))
+        # jaxlint: allow(retrace-hazard) -- jitted once per learner instance; both live for the whole run
         self._update = jax.jit(functools.partial(_update, cfg))
 
     def act(self, obs, hidden, key, eps: float, avail=None
@@ -76,6 +78,8 @@ class QmixLearner:
         self.updates += 1
         if self.updates % self.cfg.target_update_every == 0:
             self.target = jax.tree.map(jnp.copy, self.params)
+        # jaxlint: allow(host-sync-in-hot-path) -- one batched metrics pull per QMIX update
+        metrics = jax.device_get(metrics)
         return {k: float(v) for k, v in metrics.items()}
 
 

@@ -141,6 +141,7 @@ def marl_state_dim(state_mode: str, n_agents: int, n_models: int) -> int:
     return n_agents * OBS_DIM
 
 
+# jaxlint: allow(host-sync-in-hot-path) -- numpy float64 parity reference by design; fleet_obs_batch is the device-side twin
 def fleet_obs(fleet: FleetState, round_idx: int, n_rounds: int) -> np.ndarray:
     """[n, OBS_DIM] float32 — vectorized :func:`obs_vector` over the fleet."""
     t = round_idx / max(n_rounds, 1)
@@ -199,6 +200,7 @@ class MarlSelector(SelectorBase):
         if self.state_mode == "factored":
             from repro.core.fleet import fleet_summary_jit
             fn = fleet_summary_jit if fleet_is_jax(fleet) else fleet_summary
+            # jaxlint: allow(host-sync-in-hot-path) -- summary pulled once per select; it feeds the host-side replay buffer
             return np.asarray(fn(
                 fleet, tuple(model_sizes), tuple(model_fractions), round_idx,
                 self.n_rounds, local_epochs, batch_size,
@@ -219,19 +221,19 @@ class MarlSelector(SelectorBase):
         # 3), priced at the round the simulation will actually charge
         aff = (fleet_affordability_jit if fleet_is_jax(fleet)
                else fleet_affordability)
-        avail = np.asarray(aff(
-            fleet, model_sizes, model_fractions, local_epochs, batch_size))
+        avail = aff(
+            fleet, model_sizes, model_fractions, local_epochs, batch_size)
         # factored mode reuses the mask — the dominant O(n*M) cost kernel
         # runs once per select, not once for the mask and once in the summary
         state = self._state(fleet, obs, round_idx, model_sizes,
                             model_fractions, local_epochs, batch_size,
                             avail=avail)
-        actions, qv, self.hidden = self.learner.act(
+        actions_d, qv_d, self.hidden = self.learner.act(
             jnp.asarray(obs), self.hidden, sub, eps, jnp.asarray(avail))
-        qv = np.array(qv)
-        alive = np.asarray(fleet.alive)
+        # jaxlint: allow(host-sync-in-hot-path) -- the one batched pull per select: actions + Q values + liveness
+        actions, qv, alive = jax.device_get((actions_d, qv_d, fleet.alive))
         # dead devices never participate
-        actions = np.where(alive, np.array(actions), self.n_models)
+        actions = np.where(alive, actions, self.n_models)
         willing = np.flatnonzero(actions < self.n_models)
         # Top-K over Q values among willing agents (paper §4.3.3)
         order = willing[np.argsort(-qv[willing], kind="stable")]
@@ -268,8 +270,9 @@ class MarlSelector(SelectorBase):
             state = np.stack(self.ep_state + [final_state])
         else:
             state = obs.reshape(obs.shape[0], -1)
-        return (obs, state, np.stack(self.ep_actions),
-                np.asarray(self.ep_rewards, np.float32))
+        # jaxlint: allow(host-sync-in-hot-path) -- end-of-episode flush: the reward buffer is a Python-float list
+        rewards = np.asarray(self.ep_rewards, np.float32)
+        return obs, state, np.stack(self.ep_actions), rewards
 
 
 class GreedySelector(SelectorBase):
@@ -287,9 +290,10 @@ class GreedySelector(SelectorBase):
                  else fleet_cost_matrix)
         _, _, e_tra, e_com = costs(
             fleet, model_sizes, model_fractions, local_epochs, batch_size)
-        remaining = np.asarray(fleet.remaining)
-        afford = (np.asarray(e_tra + e_com) < remaining[:, None]) \
-            & np.asarray(fleet.alive)[:, None]          # [n, M]
+        # jaxlint: allow(host-sync-in-hot-path) -- one batched pull per select: costs + energy + liveness for the host argsort
+        e_need, remaining, alive = jax.device_get(
+            (e_tra + e_com, fleet.remaining, fleet.alive))
+        afford = (e_need < remaining[:, None]) & alive[:, None]   # [n, M]
         # largest affordable submodel per device (-1 if none)
         best = np.where(afford.any(axis=1),
                         M - 1 - np.argmax(afford[:, ::-1], axis=1), -1)
@@ -313,6 +317,7 @@ class RandomSelector(SelectorBase):
     def select(self, devices, round_idx, k, model_sizes, model_fractions,
                local_epochs=5, batch_size=32):
         fleet = as_fleet_state(devices)
+        # jaxlint: allow(host-sync-in-hot-path) -- numpy baseline selector: one liveness pull per round
         alive = [int(i) for i in np.flatnonzero(np.asarray(fleet.alive))]
         self.rng.shuffle(alive)
         chosen = alive[:k]
@@ -402,6 +407,7 @@ class StaticTierSelector(SelectorBase):
     def select(self, devices, round_idx, k, model_sizes, model_fractions,
                local_epochs=5, batch_size=32):
         fleet = as_fleet_state(devices)
+        # jaxlint: allow(host-sync-in-hot-path) -- numpy baseline selector: one liveness pull per round
         alive = [int(i) for i in np.flatnonzero(np.asarray(fleet.alive))]
         self.rng.shuffle(alive)
         chosen = alive[:k]

@@ -241,6 +241,7 @@ def run_bucket(method: str, global_params, x_all, y_all, bucket: Bucket, *,
                         weights=(list(bucket.weights)
                                  + [0.0] * (p_pad - p)),
                         stacked_delta=stacked,
+                        # jaxlint: allow(host-sync-in-hot-path) -- one losses pull per bucket program; deltas stay on device
                         losses=np.asarray(losses[:p]))
 
 
@@ -260,8 +261,9 @@ class CohortResult:
         for b in self.buckets:
             for r, i in enumerate(b.participants):
                 delta = jax.tree.map(lambda a, r=r: a[r], b.stacked_delta)
-                out.append((i, b.model_idx, delta, b.weights[r],
-                            float(b.losses[r])))
+                # jaxlint: allow(host-sync-in-hot-path) -- BucketResult.losses is already host numpy (pulled once per bucket)
+                loss = float(b.losses[r])
+                out.append((i, b.model_idx, delta, b.weights[r], loss))
         return out
 
 

@@ -263,7 +263,6 @@ class RoundEngine:
                                family=w.family)))
         e_prev = fleet_total_remaining(fleet)
         w1, w2, w3 = cfg.reward_weights
-        rows = np.arange(w.n_total)
         sim_time = 0.0
         n_agg = 0
         hotplug_done = False
@@ -290,11 +289,15 @@ class RoundEngine:
             m_idx = np.clip(choice, 0, M - 1)
             t_tra_m, t_com_m, e_tra_m, e_com_m = fleet_cost_matrix_jit(
                 fleet, w.sizes, w.fractions, cfg.local_epochs, cfg.batch_size)
-            need = np.asarray(e_tra_m + e_com_m)[rows, m_idx]
-            t_cost = np.asarray(t_tra_m + t_com_m)[rows, m_idx]
-            fleet, ok = fleet_charge_jit(fleet, jnp.asarray(need),
-                                         jnp.asarray(active))
-            ok = np.asarray(ok)
+            # gather each device's chosen-model column on device, charge,
+            # then pull everything the round head needs in ONE sync
+            m_col = jnp.asarray(m_idx)[:, None]
+            t_cost_d = jnp.take_along_axis(t_tra_m + t_com_m, m_col, 1)[:, 0]
+            need_d = jnp.take_along_axis(e_tra_m + e_com_m, m_col, 1)[:, 0]
+            fleet, ok_d = fleet_charge_jit(fleet, need_d,
+                                           jnp.asarray(active))
+            # jaxlint: allow(host-sync-in-hot-path) -- the one batched pull per round head: charge outcome + per-device round times
+            t_cost, ok = jax.device_get((t_cost_d, ok_d))
             hist["dropouts"] += int((active & ~ok).sum())
             survivors = active & ok
             t_round = float(t_cost[survivors].max()) if survivors.any() else 0.0
@@ -351,7 +354,10 @@ class RoundEngine:
             accs = fl_server.evaluate(global_params, w.x_val, w.y_val,
                                       family=w.family)
             acc = float(np.mean(accs))
-            e_now = fleet_total_remaining(fleet)
+            # jaxlint: allow(host-sync-in-hot-path) -- one batched pull per round tail: reward energy term + alive telemetry
+            e_now_a, alive_a = jax.device_get((fleet.remaining.sum(),
+                                               fleet.alive))
+            e_now = float(e_now_a)
             reward = (w1 * (acc - prev_acc) - w2 * (e_prev - e_now)
                       - w3 * (t_round / 60.0))
             sim_time += t_round
@@ -368,7 +374,7 @@ class RoundEngine:
                         if batch:
                             marl.learner.update(batch)
 
-            alive_now = int(np.asarray(fleet.alive).sum())
+            alive_now = int(alive_a.sum())
             hist["acc"].append(np.asarray(accs))
             hist["acc_mean"].append(acc)
             hist["energy"].append(e_now)
@@ -410,7 +416,6 @@ class RoundEngine:
         budget = int(getattr(cfg, "async_task_budget", 0)
                      or sync_task_budget(cfg))
         w1, w2, w3 = cfg.reward_weights
-        rows = np.arange(w.n_total)
 
         x_dev = y_dev = None
         if self.executor == "batched":
@@ -441,7 +446,12 @@ class RoundEngine:
         # FleetState stores busy_until in float32 (x64 is disabled), whose
         # ~8ms resolution at ~6.5e4 sim-seconds could mark a mid-task
         # device idle; fleet.busy_until is kept as an observability mirror
+        # jaxlint: allow(host-sync-in-hot-path) -- one-time setup pull of the host clock mirror
         busy64 = np.asarray(fleet.busy_until, np.float64).copy()
+        # alive mirror, maintained from values the loop pulls anyway (charge
+        # outcomes, hotplug) so the per-event idle check costs no device sync
+        # jaxlint: allow(host-sync-in-hot-path) -- one-time setup pull of the host alive mirror
+        alive_host = np.asarray(fleet.alive, bool).copy()
 
         def n_connected():
             return cfg.n_devices + (cfg.hotplug_n if state["hotplug_done"]
@@ -475,19 +485,21 @@ class RoundEngine:
             fleet = fleet_connect(fleet, cfg.n_devices, cfg.energy_scale,
                                   now=now)
             busy64[cfg.n_devices:] = now
+            alive_host[cfg.n_devices:] = True    # fleet_connect: joins live
             state["hotplug_done"] = True
             hist["hotplug"] = {
                 "sim_time": now, "vround": state["vround"],
                 "version": state["version"], "k_before": k_before,
                 "k_after": top_k(),
+                # jaxlint: allow(host-sync-in-hot-path) -- hotplug happens once per run; telemetry pull
                 "join_remaining": [float(r) for r in np.asarray(
                     fleet.remaining)[cfg.n_devices:]],
             }
 
         def try_dispatch(n_sel) -> int:
-            nonlocal fleet
+            nonlocal fleet, alive_host
             now = state["now"]
-            idle = np.asarray(fleet.alive) & (busy64 <= now + 1e-9)
+            idle = alive_host & (busy64 <= now + 1e-9)
             if not idle.any():
                 return 0
             cid = state["n_cohorts"]
@@ -506,8 +518,12 @@ class RoundEngine:
                 t_tra, t_com, e_tra, e_com = fleet_cost_matrix_jit(
                     fleet, w.sizes, w.fractions, cfg.local_epochs,
                     cfg.batch_size)
-                need = np.asarray(e_tra + e_com)[rows, m_idx]
-                t_cost = np.asarray(t_tra + t_com)[rows, m_idx]
+                m_col = jnp.asarray(m_idx)[:, None]
+                need_d = jnp.take_along_axis(e_tra + e_com, m_col,
+                                             1)[:, 0]
+                # jaxlint: allow(host-sync-in-hot-path) -- first of the two batched pulls per dispatch tick: per-task times for the event heap
+                t_cost = jax.device_get(
+                    jnp.take_along_axis(t_tra + t_com, m_col, 1)[:, 0])
                 if horizon > 0:
                     # only send work that can land inside the time budget
                     active &= (now + t_cost) <= horizon + 1e-9
@@ -517,11 +533,16 @@ class RoundEngine:
                 active[kept] = True
             if not active.any():
                 return 0
-            e_before = fleet_total_remaining(fleet)
-            fleet, ok = fleet_charge_jit(fleet, jnp.asarray(need),
-                                         jnp.asarray(active))
-            ok = np.asarray(ok)
-            e_after = fleet_total_remaining(fleet)
+            e_before_d = fleet.remaining.sum()
+            fleet, ok_d = fleet_charge_jit(fleet, need_d,
+                                           jnp.asarray(active))
+            # jaxlint: allow(host-sync-in-hot-path) -- second batched pull per dispatch tick: charge outcome + energy reward terms
+            ok, e_before_a, e_after_a = jax.device_get(
+                (ok_d, e_before_d, fleet.remaining.sum()))
+            e_before, e_after = float(e_before_a), float(e_after_a)
+            # fleet_charge kills attempted-but-unaffordable devices; fold
+            # the same deaths into the host mirror
+            alive_host &= ~(active & ~ok)
             hist["dropouts"] += int((active & ~ok).sum())
             # energy term at SEND time (includes batteries wasted by deaths)
             credit(cid, -w2 * (e_before - e_after))
@@ -591,8 +612,10 @@ class RoundEngine:
             # leak un-credited progress into later event rewards
             state["window_reward"] += w1 * (acc - state["acc_prev"])
             state["acc_prev"] = acc
-            e_now = fleet_total_remaining(fleet)
-            alive_now = int(np.asarray(fleet.alive).sum())
+            # jaxlint: allow(host-sync-in-hot-path) -- one batched telemetry pull per virtual round
+            e_now_a, alive_a = jax.device_get((fleet.remaining.sum(),
+                                               fleet.alive))
+            e_now, alive_now = float(e_now_a), int(alive_a.sum())
             hist["acc"].append(np.asarray(accs))
             hist["acc_mean"].append(acc)
             hist["energy"].append(e_now)

@@ -41,6 +41,7 @@ def evaluate(params, x_val: np.ndarray, y_val: np.ndarray,
     for i in range(0, len(x_val), batch):
         xb = jnp.asarray(x_val[i:i + batch])
         yb = jnp.asarray(y_val[i:i + batch])
+        # jaxlint: allow(host-sync-in-hot-path) -- one pull per eval batch; evaluate returns host accuracies by contract
         accs.append(np.asarray(eval_batch(params, xb, yb)) * len(xb))
         n += len(xb)
     return np.sum(accs, axis=0) / max(n, 1)

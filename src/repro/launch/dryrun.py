@@ -106,6 +106,7 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                     in_batch_sh["layer_counts"] = NamedSharding(mesh, P())
                     in_batch_sh["n_clients"] = NamedSharding(mesh, P())
                 in_sh = (state_shardings(state_shp, mesh), in_batch_sh)
+                # jaxlint: allow(retrace-hazard) -- per-shape AOT lower/compile IS the dryrun's product
                 lowered = jax.jit(
                     step, in_shardings=in_sh,
                     out_shardings=(in_sh[0], None),
@@ -119,6 +120,7 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                 inputs = train_inputs(cfg, shape)
                 inputs.pop("labels")
                 in_sh[1].pop("labels", None)
+                # jaxlint: allow(retrace-hazard) -- per-shape AOT lower/compile IS the dryrun's product
                 lowered = jax.jit(step, in_shardings=in_sh).lower(pshp, inputs)
             else:  # decode
                 set_activation_mesh(mesh, model_axis_ok=False)
@@ -132,6 +134,7 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                          if shape.global_batch > 1 else
                          NamedSharding(mesh, P(None, None)),
                          NamedSharding(mesh, P()))
+                # jaxlint: allow(retrace-hazard) -- per-shape AOT lower/compile IS the dryrun's product
                 lowered = jax.jit(step, in_shardings=in_sh,
                                   donate_argnums=(1,)).lower(
                     pshp, cache_shp, tok, pos)

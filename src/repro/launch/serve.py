@@ -38,6 +38,7 @@ class SlotServer:
         self.slots = slots
         self.max_len = max_len
         self.model, serve_step = build_serve_step(cfg)
+        # jaxlint: allow(retrace-hazard) -- jitted once per server process
         self._step = jax.jit(serve_step, donate_argnums=(1,))
         key = jax.random.PRNGKey(seed)
         self.params = self.model.init(key)

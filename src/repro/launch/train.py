@@ -86,9 +86,11 @@ def main(argv=None):
 
     if mesh is not None:
         shardings = state_shardings(jax.eval_shape(lambda: state), mesh)
+        # jaxlint: allow(retrace-hazard) -- jitted once at process startup
         step_fn = jax.jit(train_step, in_shardings=(shardings, None),
                           out_shardings=(shardings, None), donate_argnums=(0,))
     else:
+        # jaxlint: allow(retrace-hazard) -- jitted once at process startup
         step_fn = jax.jit(train_step, donate_argnums=(0,))
 
     toks = synthetic_lm_dataset(max(S * B * 4, 100_000), cfg.vocab_size, seed=0)

@@ -83,6 +83,7 @@ def _mean_loss(losses) -> float:
     un-synced and are reduced on device; only the final mean crosses."""
     if not losses:
         return 0.0
+    # jaxlint: allow(host-sync-in-hot-path) -- the documented one pull per local run: device-reduced mean loss
     return float(jnp.mean(jnp.stack(losses)))
 
 
@@ -348,6 +349,7 @@ class LayerwiseFamily(ModelFamily):
             return fn
         loss_fn = self.loss_fn(method)
         if method == "drfl":
+            # jaxlint: allow(retrace-hazard) -- memoised in self._jit_cache keyed by (step, method); built once per family
             @functools.partial(jax.jit, static_argnums=(3,))
             def fn(params, x, y, model_idx: int, lr: float = 0.05):
                 def wrapped(p):
@@ -357,6 +359,7 @@ class LayerwiseFamily(ModelFamily):
                 new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
                 return new, loss
         else:
+            # jaxlint: allow(retrace-hazard) -- memoised in self._jit_cache keyed by (step, method); built once per family
             @jax.jit
             def fn(params, x, y, lr: float = 0.05):
                 loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
@@ -369,6 +372,7 @@ class LayerwiseFamily(ModelFamily):
         """Jitted per-exit accuracy over one batch (server evaluation)."""
         fn = self._jit_cache.get("eval")
         if fn is None:
+            # jaxlint: allow(retrace-hazard) -- memoised in self._jit_cache under "eval"; built once per family
             @jax.jit
             def fn(params, x, y):
                 outs = self.apply_all_exits(params, x)

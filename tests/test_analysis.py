@@ -1,0 +1,399 @@
+"""jaxlint tests: every rule fires on a violating fixture mini-repo and
+stays quiet on its clean twin; pragma semantics (inline, standalone,
+def-header, missing-reason); the runtime compile guard; and — the actual
+CI gate — the repo itself lints clean.
+
+Fixture repos are built under ``tmp_path`` and pointed at via the
+:class:`LintConfig` anchors, so the same rule code paths that police
+``src/repro`` are exercised on three-line examples.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import BAD_PRAGMA, LintConfig, compile_guard, run_lint
+from repro.analysis.rules import frozen_refs
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+HOT_SYNC_RULE = "host-sync-in-hot-path"
+RETRACE_RULE = "retrace-hazard"
+PYTREE_RULE = "pytree-field-coverage"
+KERNEL_RULE = "kernel-parity-contract"
+FROZEN_RULE = "frozen-reference-integrity"
+
+
+def make_repo(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return str(tmp_path)
+
+
+def mini_cfg(root, **kw):
+    kw.setdefault("package", "pkg")
+    kw.setdefault("frozen_targets", ())
+    return LintConfig(repo_root=root, **kw)
+
+
+# ---------------------------------------------------------------------------
+# rule 1: host-sync-in-hot-path (call-graph aware)
+# ---------------------------------------------------------------------------
+
+
+def _sync_repo(tmp_path, util_body):
+    return make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/hot.py": """
+            from pkg.util import helper
+
+            def hot_loop(fleet):
+                return helper(fleet)
+        """,
+        "src/pkg/util.py": util_body,
+    })
+
+
+def test_host_sync_fires_transitively_but_only_on_hot_paths(tmp_path):
+    root = _sync_repo(tmp_path, """
+        import numpy as np
+
+        def helper(fleet):
+            return np.asarray(fleet.remaining)
+
+        def cold(fleet):
+            return np.asarray(fleet.remaining)
+    """)
+    report = run_lint(mini_cfg(root, hot_roots=("pkg.hot:hot_loop",),
+                               rules=[HOT_SYNC_RULE]))
+    assert [f.rule for f in report.unsuppressed] == [HOT_SYNC_RULE]
+    # the sync is flagged where it happens (inside the callee, reached
+    # through the call graph), and the identical cold function is not
+    assert report.unsuppressed[0].file.endswith("util.py")
+    assert "helper" not in {f.message for f in report.unsuppressed if
+                            "cold" in f.message}
+    assert report.exit_code == 1
+
+
+def test_host_sync_clean_when_sync_leaves_the_hot_path(tmp_path):
+    root = _sync_repo(tmp_path, """
+        import numpy as np
+
+        def helper(fleet):
+            return fleet.remaining * 2.0
+
+        def cold(fleet):
+            return np.asarray(fleet.remaining)
+    """)
+    report = run_lint(mini_cfg(root, hot_roots=("pkg.hot:hot_loop",),
+                               rules=[HOT_SYNC_RULE]))
+    assert report.unsuppressed == []
+    assert report.exit_code == 0
+
+
+def test_host_sync_ignores_host_side_scalars(tmp_path):
+    root = _sync_repo(tmp_path, """
+        def helper(fleet, n: int = 4):
+            total = float(n) * len([int(i) for i in range(n)])
+            return total
+    """)
+    report = run_lint(mini_cfg(root, hot_roots=("pkg.hot:hot_loop",),
+                               rules=[HOT_SYNC_RULE]))
+    assert report.unsuppressed == []
+
+
+# ---------------------------------------------------------------------------
+# rule 2: retrace-hazard
+# ---------------------------------------------------------------------------
+
+
+def test_retrace_fires_on_jit_in_function_body(tmp_path):
+    root = make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/jitty.py": """
+            import jax
+
+            def per_call(x):
+                f = jax.jit(lambda a: a + 1)
+                return f(x)
+        """,
+    })
+    report = run_lint(mini_cfg(root, rules=[RETRACE_RULE]))
+    assert [f.rule for f in report.unsuppressed] == [RETRACE_RULE]
+    assert "per_call" in report.unsuppressed[0].message
+
+
+def test_retrace_fires_on_array_passed_to_static_argname(tmp_path):
+    root = make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/jitty.py": """
+            import jax
+            import jax.numpy as jnp
+
+            def step(x, k):
+                return x * k
+
+            step_jit = jax.jit(step, static_argnames=("k",))
+
+            def caller():
+                k = jnp.ones(3)
+                return step_jit(jnp.zeros(3), k)
+        """,
+    })
+    report = run_lint(mini_cfg(root, rules=[RETRACE_RULE]))
+    assert len(report.unsuppressed) == 1
+    assert "static param 'k'" in report.unsuppressed[0].message
+
+
+def test_retrace_clean_on_module_level_jit(tmp_path):
+    root = make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/jitty.py": """
+            import jax
+
+            def _impl(a):
+                return a + 1
+
+            impl_jit = jax.jit(_impl)
+
+            def per_call(x):
+                return impl_jit(x)
+        """,
+    })
+    report = run_lint(mini_cfg(root, rules=[RETRACE_RULE]))
+    assert report.unsuppressed == []
+
+
+# ---------------------------------------------------------------------------
+# rule 3: pytree-field-coverage
+# ---------------------------------------------------------------------------
+
+
+_PYTREE_SRC = """
+    import jax
+
+    @jax.tree_util.register_pytree_node_class
+    class Thing:
+        a: object
+        b: object
+
+        def __init__(self, a, b):
+            self.a = a
+            self.b = b
+
+        def tree_flatten(self):
+            return ((self.a,{extra}), None)
+
+        @classmethod
+        def tree_unflatten(cls, aux, children):
+            return cls(*children{fill})
+"""
+
+
+def test_pytree_coverage_fires_on_dropped_field(tmp_path):
+    root = make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/tree.py": _PYTREE_SRC.format(extra="", fill=", 0"),
+    })
+    report = run_lint(mini_cfg(root, rules=[PYTREE_RULE]))
+    assert len(report.unsuppressed) == 1
+    assert "Thing.b" in report.unsuppressed[0].message
+
+
+def test_pytree_coverage_clean_when_all_fields_flattened(tmp_path):
+    root = make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/tree.py": _PYTREE_SRC.format(extra=" self.b", fill=""),
+    })
+    report = run_lint(mini_cfg(root, rules=[PYTREE_RULE]))
+    assert report.unsuppressed == []
+
+
+# ---------------------------------------------------------------------------
+# rule 4: kernel-parity-contract
+# ---------------------------------------------------------------------------
+
+
+def _kernel_repo(tmp_path, ref_src):
+    return make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/kernels/__init__.py": "",
+        "src/pkg/kernels/myk/__init__.py": "",
+        "src/pkg/kernels/myk/ops.py": """
+            def foo_op(x, y):
+                return x + y
+        """,
+        "src/pkg/kernels/myk/ref.py": ref_src,
+        "tests/test_kernels.py": "# exercises foo_op and foo_ref\n",
+    })
+
+
+def test_kernel_parity_fires_on_signature_drift(tmp_path):
+    root = _kernel_repo(tmp_path, """
+        def foo_ref(x):
+            return x
+    """)
+    report = run_lint(mini_cfg(root, rules=[KERNEL_RULE],
+                               kernels_rel="src/pkg/kernels"))
+    assert len(report.unsuppressed) == 1
+    assert "signatures drifted" in report.unsuppressed[0].message
+
+
+def test_kernel_parity_clean_on_matching_pair(tmp_path):
+    root = _kernel_repo(tmp_path, """
+        def foo_ref(x, y):
+            return x + y
+    """)
+    report = run_lint(mini_cfg(root, rules=[KERNEL_RULE],
+                               kernels_rel="src/pkg/kernels"))
+    assert report.unsuppressed == []
+
+
+# ---------------------------------------------------------------------------
+# rule 5: frozen-reference-integrity
+# ---------------------------------------------------------------------------
+
+
+def test_frozen_refs_missing_ledger_then_bless_then_drift(tmp_path):
+    root = make_repo(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/ref.py": """
+            def reference():
+                return 1
+        """,
+    })
+    cfg = mini_cfg(
+        root, rules=[FROZEN_RULE], frozen_ledger_rel="frozen.json",
+        frozen_targets=(("ref", "src/pkg/ref.py", "reference", "function"),))
+
+    report = run_lint(cfg)
+    assert len(report.unsuppressed) == 1
+    assert "ledger missing" in report.unsuppressed[0].message
+
+    hashes = frozen_refs.bless(cfg)
+    assert "ref" in hashes
+    assert run_lint(cfg).unsuppressed == []
+
+    path = os.path.join(root, "src/pkg/ref.py")
+    with open(path, "a") as fh:
+        fh.write("\n\ndef reference_v2():\n    return 2\n")
+    assert run_lint(cfg).unsuppressed == []   # other code may change freely
+
+    src = open(path).read().replace("return 1", "return 42")
+    open(path, "w").write(src)
+    report = run_lint(cfg)
+    assert len(report.unsuppressed) == 1
+    assert "was edited" in report.unsuppressed[0].message
+    assert "--bless-frozen" in report.unsuppressed[0].message
+
+
+# ---------------------------------------------------------------------------
+# pragma semantics
+# ---------------------------------------------------------------------------
+
+
+def _pragma_report(tmp_path, util_body):
+    root = _sync_repo(tmp_path, util_body)
+    return run_lint(mini_cfg(root, hot_roots=("pkg.hot:hot_loop",),
+                             rules=[HOT_SYNC_RULE]))
+
+
+def test_pragma_inline_suppresses_with_reason(tmp_path):
+    report = _pragma_report(tmp_path, """
+        import numpy as np
+
+        def helper(fleet):
+            return np.asarray(fleet.remaining)  # jaxlint: allow(host-sync-in-hot-path) -- one pull per round
+    """)
+    assert report.exit_code == 0
+    sup = [f for f in report.findings if f.suppressed]
+    assert len(sup) == 1
+    assert sup[0].reason == "one pull per round"
+
+
+def test_pragma_standalone_covers_next_code_line_only(tmp_path):
+    report = _pragma_report(tmp_path, """
+        import numpy as np
+
+        def helper(fleet):
+            # jaxlint: allow(host-sync-in-hot-path) -- one pull per round
+            a = np.asarray(fleet.remaining)
+            b = np.asarray(fleet.alive)
+            return a, b
+    """)
+    assert len(report.unsuppressed) == 1          # only the second pull
+    assert len([f for f in report.findings if f.suppressed]) == 1
+
+
+def test_pragma_on_def_header_covers_whole_body(tmp_path):
+    report = _pragma_report(tmp_path, """
+        import numpy as np
+
+        # jaxlint: allow(host-sync-in-hot-path) -- host-side parity reference by design
+        def helper(fleet):
+            a = np.asarray(fleet.remaining)
+            b = np.asarray(fleet.alive)
+            return a, b
+    """)
+    assert report.unsuppressed == []
+    assert len([f for f in report.findings if f.suppressed]) == 2
+
+
+def test_pragma_without_reason_is_itself_a_finding(tmp_path):
+    report = _pragma_report(tmp_path, """
+        import numpy as np
+
+        def helper(fleet):
+            return np.asarray(fleet.remaining)  # jaxlint: allow(host-sync-in-hot-path)
+    """)
+    rules = sorted(f.rule for f in report.unsuppressed)
+    assert rules == [BAD_PRAGMA, HOT_SYNC_RULE]   # reasonless pragma: no effect
+    assert report.exit_code == 1
+
+
+# ---------------------------------------------------------------------------
+# runtime compile guard
+# ---------------------------------------------------------------------------
+
+
+def test_compile_guard_counters_pass_and_fail():
+    counters = {"compiles": 2, "executions": 7}
+    with compile_guard(counters=counters, max_new=1):
+        counters["compiles"] += 1
+        counters["executions"] += 5
+    with pytest.raises(AssertionError, match="new compilation"):
+        with compile_guard(counters=counters, max_new=0):
+            counters["compiles"] += 1
+
+
+# ---------------------------------------------------------------------------
+# the gate: this repo lints clean, and the CLI agrees
+# ---------------------------------------------------------------------------
+
+
+def test_repo_lints_clean():
+    report = run_lint(LintConfig(repo_root=REPO_ROOT))
+    assert len(report.rules) >= 5
+    assert report.unsuppressed == [], "\n" + report.render()
+    # every suppression carries a written justification
+    assert all(f.reason for f in report.findings if f.suppressed)
+
+
+@pytest.mark.slow
+def test_cli_writes_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO_ROOT, "scripts", "jaxlint.py"),
+         "--json", str(out)],
+        capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(out.read_text())
+    assert data["version"] == 1
+    assert data["summary"]["unsuppressed"] == 0
+    assert data["summary"]["suppressed"] == len(
+        [f for f in data["findings"] if f["suppressed"]])

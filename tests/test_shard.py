@@ -135,6 +135,34 @@ def test_engine_runs_on_sharded_fleet():
     assert h["acc_mean"] == ref["acc_mean"]
 
 
+def test_dual_selection_step_one_executable_per_shape():
+    """The sharded hot-path step must reuse ONE executable across rounds of
+    the same shape (round_idx is traced, k/n_rounds are static) — the
+    runtime complement to the static retrace-hazard lint rule."""
+    from repro.analysis.runtime import cache_size, compile_guard
+    from repro.core.marl.networks import agent_hidden_init, agent_init
+    from repro.core.selection import OBS_DIM, dual_selection_energy_step_jit
+
+    n = 16
+    fleet = make_fleet_state(n, seed=3, backend="jax")
+    params = agent_init(jax.random.PRNGKey(0), OBS_DIM, len(SIZES) + 1)
+    f, h, *_ = dual_selection_energy_step_jit(
+        params, agent_hidden_init(n), fleet, SIZES, FRACS, k=4,
+        round_idx=0, n_rounds=8)
+    if cache_size(dual_selection_energy_step_jit) == 0:
+        pytest.skip("jit wrapper does not expose _cache_size")
+    with compile_guard(dual_selection_energy_step_jit, max_new=0):
+        for r in range(1, 5):
+            f, h, *_ = dual_selection_energy_step_jit(
+                params, h, f, SIZES, FRACS, k=4, round_idx=r, n_rounds=8)
+    # a NEW fleet shape is allowed exactly one fresh executable
+    with compile_guard(dual_selection_energy_step_jit, max_new=1):
+        dual_selection_energy_step_jit(
+            params, agent_hidden_init(2 * n),
+            make_fleet_state(2 * n, seed=4, backend="jax"), SIZES, FRACS,
+            k=4, round_idx=0, n_rounds=8)
+
+
 # ---------------------------------------------------------------------------
 # tier-1 coverage under the default single-device runtime
 # ---------------------------------------------------------------------------
