@@ -64,7 +64,8 @@ def _bench_one(n: int, iters: int, sharded: bool, seed: int = 0) -> dict:
                                   summary_width)
     from repro.core.marl.networks import agent_hidden_init, agent_init
     from repro.core.selection import OBS_DIM, dual_selection_energy_step_jit
-    from repro.sharding.fleet import FLEET_AXIS, fleet_mesh, shard_fleet
+    from repro.sharding.fleet import (FLEET_AXIS, fleet_mesh,
+                                      shard_agent_array, shard_fleet)
 
     model_sizes = (2.8e6, 8.4e6, 22.5e6, 44.8e6)
     model_fracs = (0.11, 0.3, 0.72, 1.0)
@@ -75,14 +76,10 @@ def _bench_one(n: int, iters: int, sharded: bool, seed: int = 0) -> dict:
     hidden = agent_hidden_init(n)
     n_shards = 1
     if sharded:
-        from jax.sharding import NamedSharding, PartitionSpec as P
         mesh = fleet_mesh()
         n_shards = mesh.shape[FLEET_AXIS]
         fleet = shard_fleet(fleet, mesh)
-        # same divisibility fallback as shard_fleet: replicate the hidden
-        # state when n does not divide the mesh instead of erroring
-        hspec = P(FLEET_AXIS, None) if n % n_shards == 0 else P()
-        hidden = jax.device_put(hidden, NamedSharding(mesh, hspec))
+        hidden = shard_agent_array(hidden, mesh)
 
     def step(f, h):
         f, h, part, actions, summ = dual_selection_energy_step_jit(

@@ -3,6 +3,17 @@
 Stores whole episodes (one FL run = one episode) so the GRU hidden state can
 be unrolled from t=0 during learning.  Episodes are fixed-length ``T`` with
 a validity mask (FL runs end early when the fleet dies).
+
+Sampled-agent replay (``agent_budget=``): at fleet scale the per-agent
+observation block ``[T+1, n, obs_dim]`` is the only O(n) axis left in QMIX
+training, so the buffer can cap its stored agent width at a fixed budget.
+Episodes wider than the budget are column-subsampled uniformly without
+replacement (one draw per episode, so the GRU unroll sees a consistent
+agent set across its timesteps) and the batch carries per-agent log
+importance weights (``agent_logw``; zero under uniform sampling — softmax
+attention pooling is self-normalising, so equal weights cancel exactly,
+and a future non-uniform sampler stays unbiased through the same slot).
+Replay memory then stops scaling with fleet size.
 """
 from __future__ import annotations
 
@@ -13,22 +24,49 @@ import numpy as np
 
 class ReplayBuffer:
     def __init__(self, capacity: int, episode_len: int, n_agents: int,
-                 obs_dim: int, state_dim: int, seed: int = 0):
+                 obs_dim: int, state_dim: int, seed: int = 0,
+                 agent_budget: Optional[int] = None):
         self.capacity = capacity
         self.T = episode_len
-        self.N = n_agents
+        self.n_full = n_agents
+        self.agent_budget = agent_budget
+        n_store = min(n_agents, agent_budget) if agent_budget else n_agents
+        self.N = n_store
         self.size = 0
         self.ptr = 0
         self.rng = np.random.default_rng(seed)
-        self.obs = np.zeros((capacity, episode_len + 1, n_agents, obs_dim), np.float32)
+        self.obs = np.zeros((capacity, episode_len + 1, n_store, obs_dim), np.float32)
         self.state = np.zeros((capacity, episode_len + 1, state_dim), np.float32)
-        self.actions = np.zeros((capacity, episode_len, n_agents), np.int64)
+        self.actions = np.zeros((capacity, episode_len, n_store), np.int64)
         self.rewards = np.zeros((capacity, episode_len), np.float32)
         self.mask = np.zeros((capacity, episode_len), np.float32)
+        if agent_budget is not None:
+            self.agent_idx = np.zeros((capacity, n_store), np.int64)
+            self.agent_logw = np.zeros((capacity, n_store), np.float32)
+        else:
+            self.agent_idx = None
+            self.agent_logw = None
 
-    def add_episode(self, obs, state, actions, rewards):
+    def add_episode(self, obs, state, actions, rewards, agent_idx=None,
+                    agent_logw=None):
         """obs: [t+1, N, obs_dim]; state: [t+1, state_dim];
-        actions: [t, N]; rewards: [t] — t <= T."""
+        actions: [t, N]; rewards: [t] — t <= T.
+
+        ``N`` may exceed the stored agent width (a full-fleet episode fed
+        to a budgeted buffer): the columns are then subsampled here.
+        Callers that pre-sample (``MarlSelector`` in set-mixer mode) pass
+        already-narrow episodes plus their ``agent_idx``/``agent_logw``.
+        """
+        obs = np.asarray(obs)
+        actions = np.asarray(actions)
+        if obs.shape[1] > self.N:
+            # uniform without replacement: equal self-normalised importance
+            # weights, so the stored log-weights stay zero
+            agent_idx = np.sort(self.rng.choice(obs.shape[1], self.N,
+                                                replace=False))
+            obs = obs[:, agent_idx]
+            actions = actions[:, agent_idx]
+            agent_logw = None
         t = len(rewards)
         i = self.ptr
         self.obs[i, :t + 1] = obs
@@ -41,6 +79,10 @@ class ReplayBuffer:
         self.rewards[i, t:] = 0.0
         self.mask[i, :t] = 1.0
         self.mask[i, t:] = 0.0
+        if self.agent_idx is not None:
+            self.agent_idx[i] = (np.arange(self.N) if agent_idx is None
+                                 else agent_idx)
+            self.agent_logw[i] = 0.0 if agent_logw is None else agent_logw
         self.ptr = (self.ptr + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
 
@@ -48,13 +90,25 @@ class ReplayBuffer:
         if self.size == 0:
             return None
         idx = self.rng.integers(0, self.size, size=min(batch, self.size))
-        return {
+        out = {
             "obs": self.obs[idx],
             "state": self.state[idx],
             "actions": self.actions[idx],
             "rewards": self.rewards[idx],
             "mask": self.mask[idx],
         }
+        if self.agent_logw is not None:
+            out["agent_logw"] = self.agent_logw[idx]
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        """Resident replay bytes (the BENCH_marl_train 'replay RSS' row)."""
+        total = (self.obs.nbytes + self.state.nbytes + self.actions.nbytes
+                 + self.rewards.nbytes + self.mask.nbytes)
+        if self.agent_idx is not None:
+            total += self.agent_idx.nbytes + self.agent_logw.nbytes
+        return total
 
     def __len__(self):
         return self.size

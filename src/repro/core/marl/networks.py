@@ -1,4 +1,4 @@
-"""MARL networks (paper Fig. 3): shared-weight agent nets and QMIX mixer.
+"""MARL networks (paper Fig. 3): shared-weight agent nets and QMIX mixers.
 
 Agent: MLP -> GRU -> MLP head over M+1 actions (M layer-wise models + "do
 not participate").  All agents share weights ("to decrease storage overhead
@@ -6,11 +6,26 @@ and accelerate convergence, all MLPs and GRUs within the MARL agents share
 their weights") — per-agent behaviour differs through observations and GRU
 hidden states, which are vmapped over the agent axis.
 
-Mixer (QMIX): monotonic mixing of per-agent chosen Qs into Q_tot via
-hypernetworks conditioned on the global state; weights pass through abs() to
-keep dQ_tot/dq_i >= 0.
+Two QMIX mixers share the monotonicity contract (every weight on a q path
+passes through abs() so dQ_tot/dq_i >= 0):
+
+* ``mixer_init`` / ``mixer_apply`` — the original flat hypernet mixer:
+  one weight row PER AGENT (``hyper_w1`` emits ``n_agents * embed``), so
+  parameters grow linearly with the fleet.  Kept bit-for-bit as the
+  small-fleet legacy path.
+* ``set_mixer_init`` / ``set_mixer_apply`` — the permutation-invariant
+  set/attention mixer: per-agent Q values are embedded into monotone
+  value vectors, reduced by softmax attention of a few state-conditioned
+  seed queries over agent-observation keys, and mixed through abs
+  hypernet output weights.  Parameter count and per-step cost are
+  independent of ``n_agents`` (beyond the attended set), so QMIX trains
+  at 1M agents on sampled-agent replay minibatches.  The attention
+  reduction is routed through the ``kernels/flash_attention`` ops/ref
+  parity contract (:func:`attention_reduce`).
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -63,3 +78,102 @@ def mixer_apply(params, qs, state, n_agents: int, embed: int = 32):
     w2 = jnp.abs(mlp_apply(params["hyper_w2"], state))
     b2 = mlp_apply(params["hyper_b2"], state)[..., 0]
     return jnp.einsum("...e,...e->...", hid, w2) + b2
+
+
+# ---------------------------------------------------------------------------
+# permutation-invariant set/attention mixer (the scale-free path)
+# ---------------------------------------------------------------------------
+
+#: agent-set size at which the attention reduction switches from the
+#: pure-jnp ``attention_ref`` oracle to the Pallas ``flash_attention``
+#: kernel on TPU (below it the kernel's grid/DMA overhead loses to one
+#: small fused XLA softmax; the CPU fallback always uses the oracle)
+FLASH_ATTENTION_MIN_AGENTS = 65536
+
+
+def attention_reduce(q, k, v):
+    """Softmax-attention pooling over the agent axis.
+
+    ``q`` [B, Sq, D] (state-conditioned seed queries); ``k``/``v``
+    [B, N, D] (per-agent keys/values) -> [B, Sq, D].  Routed through the
+    ``kernels/flash_attention`` ops/ref parity contract: the Pallas
+    kernel on TPU at :data:`FLASH_ATTENTION_MIN_AGENTS`-plus
+    block-aligned agent sets, the identical-math ``attention_ref``
+    oracle everywhere else (CPU fallback and small/ragged sets).
+    """
+    n = k.shape[-2]
+    sq = q.shape[-2]
+    if (jax.default_backend() == "tpu"
+            and n >= FLASH_ATTENTION_MIN_AGENTS
+            and n % 128 == 0 and sq % min(128, sq) == 0):
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q[:, :, None, :], k[:, :, None, :],
+                              v[:, :, None, :], causal=False)
+        return out[:, :, 0, :]
+    from repro.kernels.flash_attention import attention_ref
+    return attention_ref(q, k, v, causal=False)
+
+
+def set_mixer_init(key, state_dim: int, obs_dim: int, embed: int = 32,
+                   n_seeds: int = 4):
+    """Mixer parameters whose count is independent of ``n_agents``."""
+    ks = jax.random.split(key, 8)
+    d = embed
+    return {
+        # per-agent observation features: keys + value context
+        "obs_embed": mlp_init(ks[0], [obs_dim, d, d]),
+        # attention keys use d-1 learned dims; slot -1 carries the agent's
+        # log importance weight (see set_mixer_apply)
+        "key_proj": dense_bias_init(ks[1], d, d - 1, jnp.float32),
+        "hyper_q": mlp_init(ks[2], [state_dim, d, n_seeds * (d - 1)]),
+        # abs-constrained per-dim scale on the scalar q_i (monotone path)
+        "hyper_w1": mlp_init(ks[3], [state_dim, d, d]),
+        "hyper_b1": mlp_init(ks[4], [state_dim, d]),
+        "val_obs": dense_bias_init(ks[5], d, d, jnp.float32),
+        "hyper_w2": mlp_init(ks[6], [state_dim, d, n_seeds * d]),
+        "hyper_b2": mlp_init(ks[7], [state_dim, d, 1]),
+    }
+
+
+def set_mixer_apply(params, qs, obs, state, n_seeds: int = 4,
+                    embed: int = 32, logw=None):
+    """qs: [..., N]; obs: [..., N, obs_dim]; state: [..., state_dim];
+    ``logw`` (optional, broadcastable to [..., N]): per-agent log
+    importance weights from sampled-agent replay -> Q_tot [...].
+
+    Monotone in every ``q_i``: the only q path is ``elu(q_i * |w1(s)| +
+    ...)`` into non-negative attention weights and ``|w2(s)|`` output
+    weights.  Permutation-invariant over agents: the reduction is a
+    softmax-attention mean over the agent axis.  Importance reweighting
+    is exact self-normalised IS — the query's constant ``sqrt(d)`` in
+    slot -1 cancels the kernel's ``1/sqrt(d)`` logit scale, so slot -1
+    of the key adds ``logw_i`` to the logits on the Pallas and ref
+    paths alike.
+    """
+    d = embed
+    batch = qs.shape[:-1]
+    n = qs.shape[-1]
+    z = mlp_apply(params["obs_embed"], obs)                    # [..., N, d]
+    keys = dense_apply(params["key_proj"], z)                  # [..., N, d-1]
+    if logw is None:
+        logw_col = jnp.zeros(batch + (n, 1), qs.dtype)
+    else:
+        logw_col = jnp.broadcast_to(
+            jnp.asarray(logw, qs.dtype)[..., None], batch + (n, 1))
+    keys = jnp.concatenate([keys, logw_col], axis=-1)          # [..., N, d]
+    seeds = mlp_apply(params["hyper_q"], state)
+    seeds = seeds.reshape(batch + (n_seeds, d - 1))
+    const = jnp.full(batch + (n_seeds, 1), math.sqrt(d), seeds.dtype)
+    seeds = jnp.concatenate([seeds, const], axis=-1)           # [..., S, d]
+    w1 = jnp.abs(mlp_apply(params["hyper_w1"], state))         # [..., d]
+    b1 = mlp_apply(params["hyper_b1"], state)
+    vals = jax.nn.elu(qs[..., None] * w1[..., None, :]
+                      + dense_apply(params["val_obs"], z)
+                      + b1[..., None, :])                      # [..., N, d]
+    pooled = attention_reduce(seeds.reshape((-1, n_seeds, d)),
+                              keys.reshape((-1, n, d)),
+                              vals.reshape((-1, n, d)))
+    pooled = pooled.reshape(batch + (n_seeds * d,))
+    w2 = jnp.abs(mlp_apply(params["hyper_w2"], state))
+    b2 = mlp_apply(params["hyper_b2"], state)[..., 0]
+    return jnp.sum(pooled * w2, axis=-1) + b2

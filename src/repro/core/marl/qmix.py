@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.marl.networks import (agent_hidden_init, agent_init,
-                                      agent_step, mixer_apply, mixer_init)
+                                      agent_step, mixer_apply, mixer_init,
+                                      set_mixer_apply, set_mixer_init)
 from repro.optim import adamw_init, adamw_update
 
 
@@ -36,6 +37,11 @@ class QmixConfig:
     eps_end: float = 0.05
     eps_decay_rounds: int = 200
     batch_size: int = 16
+    # "flat" = per-agent hypernet mixer (legacy, O(n_agents) params);
+    # "set" = permutation-invariant set/attention mixer (n-free params,
+    # trains on sampled-agent replay minibatches)
+    mixer_mode: str = "flat"
+    n_seeds: int = 4          # set-mixer seed queries
 
 
 def epsilon(cfg: QmixConfig, round_idx: int) -> float:
@@ -49,9 +55,15 @@ class QmixLearner:
     def __init__(self, cfg: QmixConfig, key):
         self.cfg = cfg
         k1, k2 = jax.random.split(key)
+        if cfg.mixer_mode == "set":
+            mixer = set_mixer_init(k2, cfg.state_dim, cfg.obs_dim,
+                                   cfg.mixer_embed, cfg.n_seeds)
+        else:
+            mixer = mixer_init(k2, cfg.n_agents, cfg.state_dim,
+                               cfg.mixer_embed)
         self.params = {
             "agent": agent_init(k1, cfg.obs_dim, cfg.num_actions, cfg.hidden),
-            "mixer": mixer_init(k2, cfg.n_agents, cfg.state_dim, cfg.mixer_embed),
+            "mixer": mixer,
         }
         self.target = jax.tree.map(jnp.copy, self.params)
         self.opt = adamw_init(self.params)
@@ -99,9 +111,14 @@ def _act(cfg: QmixConfig, params, obs, hidden, key, eps, avail):
 
 
 def _unroll(cfg: QmixConfig, params, obs_seq):
-    """obs_seq: [B, T+1, N, obs] -> qs [B, T+1, N, A] via GRU unroll."""
+    """obs_seq: [B, T+1, N, obs] -> qs [B, T+1, N, A] via GRU unroll.
+
+    N is the batch's agent axis — ``cfg.n_agents`` for full-fleet replay,
+    the sampled-agent budget for set-mixer replay minibatches (shared
+    agent weights make the unroll agnostic to which agents are present).
+    """
     B = obs_seq.shape[0]
-    h0 = jnp.zeros((B, cfg.n_agents, cfg.hidden), jnp.float32)
+    h0 = jnp.zeros((B, obs_seq.shape[2], cfg.hidden), jnp.float32)
 
     def step(h, obs_t):                                  # obs_t: [B,N,obs]
         q, h = jax.vmap(lambda o, hh: agent_step(params["agent"], o, hh))(obs_t, h)
@@ -111,23 +128,39 @@ def _unroll(cfg: QmixConfig, params, obs_seq):
     return jnp.moveaxis(qs, 0, 1)                        # [B,T+1,N,A]
 
 
+def _mix(cfg: QmixConfig, mix_params, q_agents, obs_steps, state_steps,
+         logw):
+    """Route per-agent Qs through the configured mixer (static branch)."""
+    if cfg.mixer_mode == "set":
+        return set_mixer_apply(mix_params, q_agents, obs_steps, state_steps,
+                               n_seeds=cfg.n_seeds, embed=cfg.mixer_embed,
+                               logw=logw)
+    return mixer_apply(mix_params, q_agents, state_steps, cfg.n_agents,
+                       cfg.mixer_embed)
+
+
 def _update(cfg: QmixConfig, params, target, opt, batch):
     obs, state = batch["obs"], batch["state"]            # [B,T+1,...]
     actions, rewards, mask = batch["actions"], batch["rewards"], batch["mask"]
+    # sampled-agent replay importance log-weights [B, N] (zeros under
+    # uniform sampling; absent from flat-mode batches)
+    logw = batch.get("agent_logw")
+    if logw is not None:
+        logw = logw[:, None, :]                          # broadcast over T
 
     def loss_fn(p):
         qs = _unroll(cfg, p, obs)                         # [B,T+1,N,A]
         q_taken = jnp.take_along_axis(
             qs[:, :-1], actions[..., None], axis=-1)[..., 0]   # [B,T,N]
-        q_tot = mixer_apply(p["mixer"], q_taken, state[:, :-1],
-                            cfg.n_agents, cfg.mixer_embed)  # [B,T]
+        q_tot = _mix(cfg, p["mixer"], q_taken, obs[:, :-1],
+                     state[:, :-1], logw)                 # [B,T]
 
         tq = _unroll(cfg, target, obs)                    # [B,T+1,N,A]
         next_best = jnp.argmax(qs[:, 1:], axis=-1)        # double-Q: online argmax
         tq_next = jnp.take_along_axis(
             tq[:, 1:], next_best[..., None], axis=-1)[..., 0]  # [B,T,N]
-        tq_tot = mixer_apply(target["mixer"], tq_next, state[:, 1:],
-                             cfg.n_agents, cfg.mixer_embed)
+        tq_tot = _mix(cfg, target["mixer"], tq_next, obs[:, 1:],
+                      state[:, 1:], logw)
         y = rewards + cfg.gamma * jax.lax.stop_gradient(tq_tot) * mask
         td = (y - q_tot) * mask
         return jnp.sum(td ** 2) / jnp.maximum(mask.sum(), 1.0)

@@ -34,6 +34,15 @@ The QMIX mixer's global state has two modes (``MarlSelector(state_mode=)``):
 ``resolve_state_mode`` maps the config-level ``"auto"`` to flat at or
 below :data:`FACTORED_AUTO_N` devices (small fleets keep the legacy
 trajectory bit-for-bit) and factored at scale.
+
+The QMIX *mixer* has the same two-regime split (``MarlSelector(
+mixer_mode=)``): ``"flat"`` keeps the original per-agent hypernet mixer
+(one weight row per agent — bit-for-bit legacy, O(n) parameters and
+replay), ``"set"`` swaps in the permutation-invariant set/attention
+mixer (:func:`repro.core.marl.networks.set_mixer_apply`) plus
+sampled-agent episode traces capped at ``agent_budget`` agents, making
+QMIX *training* cost independent of fleet size.  ``resolve_mixer_mode``
+maps ``"auto"`` across the same :data:`FACTORED_AUTO_N` boundary.
 """
 from __future__ import annotations
 
@@ -131,6 +140,29 @@ def resolve_state_mode(state_mode: str, n_agents: int) -> str:
                      f"(expected 'auto', 'flat' or 'factored')")
 
 
+MIXER_MODES = ("flat", "set")
+
+#: default sampled-agent budget for set-mixer replay: episode traces and
+#: replay minibatches store at most this many agents per episode (uniform
+#: without replacement, importance-reweighted through the mixer's logit
+#: slot), so QMIX training memory/compute stop scaling with fleet size
+SAMPLE_AGENT_BUDGET = 4096
+
+
+def resolve_mixer_mode(mixer_mode: str, n_agents: int) -> str:
+    """Map a config-level mixer mode to a concrete one: ``"auto"`` keeps
+    the bit-for-bit flat hypernet mixer at or below
+    :data:`FACTORED_AUTO_N` agents (the same inclusive boundary as
+    :func:`resolve_state_mode`) and switches to the scale-free
+    set/attention mixer above."""
+    if mixer_mode == "auto":
+        return "set" if n_agents > FACTORED_AUTO_N else "flat"
+    if mixer_mode in MIXER_MODES:
+        return mixer_mode
+    raise ValueError(f"unknown mixer_mode {mixer_mode!r} "
+                     f"(expected 'auto', 'flat' or 'set')")
+
+
 def marl_state_dim(state_mode: str, n_agents: int, n_models: int) -> int:
     """QMIX mixer ``state_dim`` for a concrete state mode — ``n_agents *
     OBS_DIM`` flat, :func:`repro.core.fleet.summary_width` (independent of
@@ -163,19 +195,35 @@ class MarlSelector(SelectorBase):
     fixed-width :func:`repro.core.fleet.fleet_summary`, making
     ``learner.cfg.state_dim`` independent of fleet size (``"auto"``
     resolves by :func:`resolve_state_mode`).
+
+    ``mixer_mode="flat"`` (default) keeps the per-agent hypernet mixer
+    bit-for-bit; ``"set"`` swaps in the permutation-invariant
+    set/attention mixer and caps the episode trace at ``agent_budget``
+    uniformly-sampled agents (redrawn per episode, fixed within one so
+    the training-time GRU unroll is consistent), making replay memory
+    and the QMIX update independent of fleet size (``"auto"`` resolves
+    by :func:`resolve_mixer_mode`).  ``select`` still acts on the FULL
+    fleet either way — only the learning trace is sampled.
     """
 
     name = "marl"
 
     def __init__(self, n_devices: int, n_models: int, n_rounds: int,
-                 seed: int = 0, state_mode: str = "flat"):
+                 seed: int = 0, state_mode: str = "flat",
+                 mixer_mode: str = "flat",
+                 agent_budget: int = SAMPLE_AGENT_BUDGET):
         self.n_models = n_models
         self.n_rounds = n_rounds
         self.state_mode = resolve_state_mode(state_mode, n_devices)
+        self.mixer_mode = resolve_mixer_mode(mixer_mode, n_devices)
+        self.agent_budget = int(agent_budget)
+        self.n_sampled = (min(n_devices, self.agent_budget)
+                          if self.mixer_mode == "set" else n_devices)
         cfg = QmixConfig(
             n_agents=n_devices, obs_dim=OBS_DIM, num_actions=n_models + 1,
             state_dim=marl_state_dim(self.state_mode, n_devices, n_models),
-            eps_decay_rounds=max(10, n_rounds // 2))
+            eps_decay_rounds=max(10, n_rounds // 2),
+            mixer_mode=self.mixer_mode)
         self.learner = QmixLearner(cfg, jax.random.PRNGKey(seed))
         self.key = jax.random.PRNGKey(seed + 1)
         self.hidden = self.learner.init_hidden()
@@ -184,14 +232,33 @@ class MarlSelector(SelectorBase):
         # last round-pricing seen by select(); episode_arrays uses it to
         # price the terminal factored summary consistently
         self._last_pricing = None
+        self._sample_rng = np.random.default_rng((seed, 0xA6E))
+        self._ep_idx: Optional[np.ndarray] = None
+        self._draw_agent_sample()
         # episode trace for the replay buffer
         self.ep_obs: List[np.ndarray] = []
         self.ep_state: List[np.ndarray] = []
         self.ep_actions: List[np.ndarray] = []
         self.ep_rewards: List[float] = []
 
+    def _draw_agent_sample(self):
+        """Redraw the episode's sampled-agent set (set-mixer mode only;
+        uniform without replacement, so the self-normalised importance
+        weights the mixer consumes are equal — log-weights zero)."""
+        n = self.learner.cfg.n_agents
+        if self.mixer_mode == "set" and self.n_sampled < n:
+            self._ep_idx = np.sort(self._sample_rng.choice(
+                n, self.n_sampled, replace=False))
+        else:
+            self._ep_idx = None
+
+    def _trace_agents(self, arr: np.ndarray) -> np.ndarray:
+        """Cut a per-agent [n, ...] row down to the episode's sampled set."""
+        return arr if self._ep_idx is None else arr[self._ep_idx]
+
     def reset_episode(self):
         self.hidden = self.learner.init_hidden()
+        self._draw_agent_sample()
         self.ep_obs, self.ep_state = [], []
         self.ep_actions, self.ep_rewards = [], []
 
@@ -241,9 +308,11 @@ class MarlSelector(SelectorBase):
         model_choice = [-1] * len(fleet)
         for i in chosen:
             model_choice[i] = int(actions[i])
-        self.ep_obs.append(obs)
+        # learning trace: full fleet in flat mode, the episode's sampled
+        # agent set under the set mixer (replay memory stays bounded)
+        self.ep_obs.append(self._trace_agents(obs))
         self.ep_state.append(state)
-        self.ep_actions.append(actions.copy())
+        self.ep_actions.append(self._trace_agents(actions).copy())
         return Selection(participants=chosen, model_choice=model_choice,
                          q_values=qv)
 
@@ -255,8 +324,8 @@ class MarlSelector(SelectorBase):
 
     def episode_arrays(self, final_devices, round_idx):
         fleet = as_fleet_state(final_devices)
-        final_obs = fleet_obs(fleet, round_idx, self.n_rounds)
-        obs = np.stack(self.ep_obs + [final_obs])
+        final_obs_full = fleet_obs(fleet, round_idx, self.n_rounds)
+        obs = np.stack(self.ep_obs + [self._trace_agents(final_obs_full)])
         if self.state_mode == "factored":
             if self._last_pricing is None:
                 # both modes reject zero-step episodes (flat fails in the
@@ -265,9 +334,15 @@ class MarlSelector(SelectorBase):
                                  "no round pricing to build the terminal "
                                  "factored summary from")
             sizes, fracs, epochs, batch = self._last_pricing
-            final_state = self._state(fleet, final_obs, round_idx, sizes,
-                                      fracs, epochs, batch)
+            final_state = self._state(fleet, final_obs_full, round_idx,
+                                      sizes, fracs, epochs, batch)
             state = np.stack(self.ep_state + [final_state])
+        elif self._ep_idx is not None:
+            # sampled trace + flat state: the mixer state stays the FULL
+            # fleet's concatenated observations (recorded per select);
+            # only the per-agent obs/action columns were subsampled
+            state = np.stack(self.ep_state
+                             + [final_obs_full.reshape(-1)])
         else:
             state = obs.reshape(obs.shape[0], -1)
         # jaxlint: allow(host-sync-in-hot-path) -- end-of-episode flush: the reward buffer is a Python-float list

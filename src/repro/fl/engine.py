@@ -211,6 +211,37 @@ def sync_task_budget(cfg) -> int:
     return hr * k_pre + (cfg.n_rounds - hr) * k_post
 
 
+def _marl_train(marl, buffer, hist, fleet, round_idx, n_updates):
+    """Flush the episode trace into replay, run QMIX updates, and record
+    effective-replay telemetry under ``hist["qmix"]`` (the resolved buffer
+    capacity — possibly degraded by ``_make_buffer``'s obs budget — plus
+    mixer mode, stored-agent width, update count and per-update TD loss),
+    so fig5/table1 runs can report the replay the learner actually saw.
+
+    Call order (episode_arrays → add_episode → sample/update loop) is
+    byte-identical to the legacy inline blocks — the buffer RNG consumes
+    the same draws, keeping sync parity with the frozen reference."""
+    obs, state, actions, rewards = marl.episode_arrays(fleet, round_idx)
+    buffer.add_episode(obs, state, actions, rewards)
+    losses = []
+    for _ in range(n_updates):
+        batch = buffer.sample(marl.learner.cfg.batch_size)
+        if batch:
+            losses.append(marl.learner.update(batch)["td_loss"])
+    q = hist.setdefault("qmix", {
+        "mixer_mode": marl.mixer_mode,
+        "replay_capacity": buffer.capacity,
+        "replay_episode_len": buffer.T,
+        "replay_agents": buffer.N,
+        "replay_episodes": 0,
+        "updates": 0,
+        "td_loss": [],
+    })
+    q["replay_episodes"] = len(buffer)
+    q["updates"] = marl.learner.updates
+    q["td_loss"].extend(losses)
+
+
 class RoundEngine:
     """Scheduler layer: runs one FL episode under ``cfg.engine_mode``.
 
@@ -366,13 +397,8 @@ class RoundEngine:
 
             if marl:
                 if (t + 1) % cfg.marl_train_every == 0 and marl.ep_rewards:
-                    obs, state, actions, rewards = marl.episode_arrays(
-                        fleet, t + 1)
-                    buffer.add_episode(obs, state, actions, rewards)
-                    for _ in range(cfg.marl_updates_per_round):
-                        batch = buffer.sample(marl.learner.cfg.batch_size)
-                        if batch:
-                            marl.learner.update(batch)
+                    _marl_train(marl, buffer, hist, fleet, t + 1,
+                                cfg.marl_updates_per_round)
 
             alive_now = int(alive_a.sum())
             hist["acc"].append(np.asarray(accs))
@@ -765,15 +791,10 @@ class RoundEngine:
             # (the episode trace only fully commits once in-flight cohorts
             # land), so the learner trains at episode end with the same
             # total update count a sync run would have used
-            obs, st, actions, rewards = marl.episode_arrays(
-                fleet, state["vround"])
-            buffer.add_episode(obs, st, actions, rewards)
             n_updates = cfg.marl_updates_per_round * max(
                 1, state["vround"] // max(1, cfg.marl_train_every))
-            for _ in range(n_updates):
-                batch = buffer.sample(marl.learner.cfg.batch_size)
-                if batch:
-                    marl.learner.update(batch)
+            _marl_train(marl, buffer, hist, fleet, state["vround"],
+                        n_updates)
 
         hist["n_tasks"] = state["tasks_started"]
         hist["n_aggregations"] = state["version"]

@@ -87,6 +87,14 @@ class FLConfig:
     # state_dim is independent of fleet size; "auto" keeps flat up to
     # repro.core.selection.FACTORED_AUTO_N (256) devices, factors above
     state_mode: str = "auto"            # auto | flat | factored
+    # QMIX mixer: "flat" = per-agent hypernet (bit-for-bit legacy, O(n)
+    # params + replay), "set" = permutation-invariant set/attention mixer
+    # over sampled-agent replay (n-free training cost); "auto" keeps flat
+    # up to FACTORED_AUTO_N (256) devices like state_mode
+    mixer_mode: str = "auto"            # auto | flat | set
+    # sampled-agent budget under the set mixer: episode traces and replay
+    # minibatches keep at most this many agents (uniform per episode)
+    marl_agent_budget: int = 4096
     # shard FleetState's [n] arrays over a jax.sharding "fleet" mesh of this
     # many local devices (0/1 = off, -1 = all local devices); selection +
     # energy kernels then run data-parallel (repro.sharding.fleet)
@@ -99,7 +107,9 @@ def _make_selector(cfg: FLConfig, n_models: int) -> SelectorBase:
     return {
         "marl": lambda: MarlSelector(
             cfg.n_devices + cfg.hotplug_n, n_models, cfg.n_rounds, cfg.seed,
-            state_mode=getattr(cfg, "state_mode", "auto")),
+            state_mode=getattr(cfg, "state_mode", "auto"),
+            mixer_mode=getattr(cfg, "mixer_mode", "auto"),
+            agent_budget=getattr(cfg, "marl_agent_budget", 4096)),
         "greedy": lambda: GreedySelector(),
         "random": lambda: RandomSelector(cfg.seed),
         "static": lambda: StaticTierSelector(cfg.seed),
@@ -115,8 +125,10 @@ _BUFFER_OBS_ELEMS = 2 ** 24
 
 
 def _make_buffer(cfg: FLConfig):
+    import logging
+
     from repro.core.marl.buffer import ReplayBuffer
-    from repro.core.selection import OBS_DIM, marl_state_dim
+    from repro.core.selection import OBS_DIM, marl_state_dim, resolve_mixer_mode
     from repro.models.family import get_family
     n_agents = cfg.n_devices + cfg.hotplug_n
     if cfg.engine_mode == "async":
@@ -130,10 +142,26 @@ def _make_buffer(cfg: FLConfig):
     state_dim = marl_state_dim(
         getattr(cfg, "state_mode", "auto"), n_agents,
         get_family(cfg.model_family).num_submodels())
+    mixer_mode = resolve_mixer_mode(getattr(cfg, "mixer_mode", "auto"),
+                                    n_agents)
+    agent_budget = (int(getattr(cfg, "marl_agent_budget", 4096))
+                    if mixer_mode == "set" else None)
+    stored_agents = (min(n_agents, agent_budget) if agent_budget
+                     else n_agents)
     capacity = max(4, min(64, _BUFFER_OBS_ELEMS
-                          // ((episode_len + 1) * n_agents * OBS_DIM)))
+                          // ((episode_len + 1) * stored_agents * OBS_DIM)))
+    if capacity < 64:
+        # loud, once per buffer: fig5/table1 runs at scale must be able to
+        # report their EFFECTIVE replay size (also recorded per-update in
+        # hist["qmix"] by the engine)
+        logging.getLogger(__name__).warning(
+            "QMIX replay capacity degraded to %d episodes (episode_len=%d, "
+            "stored agents=%d of %d, obs budget=%d elems); consider "
+            "mixer_mode='set' / a smaller marl_agent_budget",
+            capacity, episode_len, stored_agents, n_agents,
+            _BUFFER_OBS_ELEMS)
     return ReplayBuffer(capacity, episode_len, n_agents, OBS_DIM,
-                        state_dim, cfg.seed)
+                        state_dim, cfg.seed, agent_budget=agent_budget)
 
 
 def run_simulation(cfg, verbose: bool = False) -> Dict:

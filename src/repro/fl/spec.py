@@ -46,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+from repro.core.selection import MIXER_MODES as _CONCRETE_MIXER_MODES
 from repro.core.selection import STATE_MODES as _CONCRETE_STATE_MODES
 from repro.fl.simulation import FLConfig
 from repro.models.family import get_family, known_families
@@ -57,6 +58,7 @@ CLIENT_EXECUTORS = ("auto", "perclient", "batched")
 # config level adds "auto" on top of the selector's concrete modes, so a
 # mode added in repro.core.selection is accepted here automatically
 STATE_MODES = ("auto",) + _CONCRETE_STATE_MODES
+MIXER_MODES = ("auto",) + _CONCRETE_MIXER_MODES
 
 
 def _check(cond, msg):
@@ -126,16 +128,20 @@ class MarlSpec:
     updates_per_round: int = 2
     episodes: int = 1                   # selector pre-training episodes
     state_mode: str = "auto"            # auto | flat | factored QMIX state
+    mixer_mode: str = "auto"            # auto | flat | set QMIX mixer
+    agent_budget: int = 4096            # sampled-agent replay cap (set mixer)
 
     def __post_init__(self):
         _check_choice(self.selector, SELECTORS, "marl.selector")
         _check_choice(self.state_mode, STATE_MODES, "marl.state_mode")
+        _check_choice(self.mixer_mode, MIXER_MODES, "marl.mixer_mode")
         _check(len(tuple(self.reward_weights)) == 3,
                "marl.reward_weights must have exactly 3 entries (w1,w2,w3)")
         _check(self.train_every >= 1, "marl.train_every must be >= 1")
         _check(self.updates_per_round >= 0,
                "marl.updates_per_round must be >= 0")
         _check(self.episodes >= 1, "marl.episodes must be >= 1")
+        _check(self.agent_budget >= 1, "marl.agent_budget must be >= 1")
 
 
 @dataclasses.dataclass
@@ -218,7 +224,9 @@ class SimulationSpec:
                 train_every=cfg.marl_train_every,
                 updates_per_round=cfg.marl_updates_per_round,
                 episodes=cfg.marl_episodes,
-                state_mode=cfg.state_mode),
+                state_mode=cfg.state_mode,
+                mixer_mode=cfg.mixer_mode,
+                agent_budget=cfg.marl_agent_budget),
             energy=EnergySpec(
                 scale=cfg.energy_scale, hotplug_round=cfg.hotplug_round,
                 hotplug_n=cfg.hotplug_n))
@@ -250,6 +258,8 @@ class SimulationSpec:
             async_task_budget=self.engine.async_task_budget,
             client_executor=self.engine.client_executor,
             state_mode=self.marl.state_mode,
+            mixer_mode=self.marl.mixer_mode,
+            marl_agent_budget=self.marl.agent_budget,
             fleet_mesh=self.engine.fleet_mesh)
 
 

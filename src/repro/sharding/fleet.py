@@ -26,6 +26,8 @@ Public surface (one-line contracts):
   divisibility fallback).
 * :func:`fleet_shardings` — FleetState-shaped pytree of NamedShardings.
 * :func:`shard_fleet` — device_put the fleet onto the mesh.
+* :func:`shard_agent_array` — row-shard one companion ``[n, ...]`` array
+  (GRU hidden states, obs matrices) with the same fallback policy.
 * :func:`unshard_fleet` — gather back to single-device host arrays.
 * :func:`maybe_shard_fleet` — config-level entry: no-op below 2 shards.
 * :func:`is_sharded` — True when a fleet's arrays live on a >1 mesh.
@@ -93,6 +95,24 @@ def fleet_spec_for(name: str, shape, mesh: Mesh) -> P:
                     out.append(None)
             return P(*out)
     return P()
+
+
+def shard_agent_array(x, mesh: Mesh, axis: int = 0):
+    """Place one per-agent array (``[n, ...]``) on the mesh, row-sharded
+    over :data:`FLEET_AXIS` along ``axis`` — the companion to
+    :func:`shard_fleet` for arrays that ride WITH the fleet but live
+    outside :class:`FleetState` (QMIX GRU hidden states ``[n, hidden]``,
+    observation matrices ``[n, OBS_DIM]``).  Same divisibility policy as
+    :func:`fleet_spec_for`: an agent dim that does not divide the mesh
+    falls back to replication instead of erroring."""
+    shape = np.shape(x)
+    size = _mesh_size(mesh, (FLEET_AXIS,))
+    if (len(shape) > axis and shape[axis] % size == 0
+            and shape[axis] >= size):
+        spec = [None] * len(shape)
+        spec[axis] = FLEET_AXIS
+        return jax.device_put(x, NamedSharding(mesh, P(*spec)))
+    return jax.device_put(x, NamedSharding(mesh, P()))
 
 
 def fleet_shardings(fleet: FleetState, mesh: Mesh) -> dict:

@@ -43,6 +43,43 @@ def test_flash_attention_sweep(B, S, Hq, Hkv, D, causal, window, bq, bk,
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("B,Sq,Sk,D,bq,bk", [
+    # the set-mixer regime: a few seed queries pooling over a large
+    # (block-aligned) agent axis, non-causal, rectangular Sq != Sk
+    (2, 4, 512, 32, 4, 128),
+    (1, 4, 4096, 32, 4, 256),
+    (3, 8, 256, 64, 8, 64),
+])
+def test_flash_attention_rectangular_noncausal(B, Sq, Sk, D, bq, bk):
+    """ops/ref parity for the attention-reduce shape class (Pallas
+    interpret mode) — seed queries over agent keys, no masking."""
+    key = jax.random.PRNGKey(Sq * Sk + D)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, 1, D))
+    k = jax.random.normal(ks[1], (B, Sk, 1, D))
+    v = jax.random.normal(ks[2], (B, Sk, 1, D))
+    out = flash_attention(q, k, v, causal=False, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = _fa_ref(q, k, v, False, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_attention_reduce_matches_ref():
+    """The set mixer's pooling entry point is the oracle off-TPU (and the
+    kernel's math on it): [B, S, D] queries over [B, N, D] keys/values."""
+    from repro.core.marl.networks import attention_reduce
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 4, 32))
+    k = jax.random.normal(ks[1], (2, 100, 32))
+    v = jax.random.normal(ks[2], (2, 100, 32))
+    out = attention_reduce(q, k, v)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+
+
 @hypothesis.given(
     n=st.integers(1, 8), l=st.integers(1, 6),
     dpow=st.integers(4, 9), seed=st.integers(0, 99),

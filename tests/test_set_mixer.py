@@ -1,0 +1,318 @@
+"""Set/attention QMIX mixer (mixer_mode="set") vs the flat hypernet mixer.
+
+Contracts:
+* ``"auto"`` resolves flat at or below FACTORED_AUTO_N agents — the legacy
+  bit-for-bit small-fleet path (the full-trajectory parity with explicit
+  ``mixer_mode="flat"`` is asserted through ``run_simulation``) — and set
+  above.
+* the set mixer is permutation-invariant over agents, monotone in every
+  per-agent Q (dQ_tot/dq_i >= 0, the QMIX contract), and its parameter
+  count is independent of ``n_agents``.
+* the importance-weight logit slot is exact self-normalised IS: feeding
+  ``logw`` equals an explicit softmax over ``logits + logw`` reference.
+* sampled-agent replay bounds episode memory: the selector's trace and the
+  buffer's stored width are capped at ``agent_budget``, wide episodes fed
+  to a budgeted buffer are column-subsampled, and the batch carries
+  ``agent_logw`` only on the budgeted path (flat batches stay key-for-key
+  identical to the legacy dict).
+* the set-mixer training step compiles ONE executable per (batch,
+  sampled-agent) shape (compile_guard, mirroring the dual-selection guard
+  in tests/test_shard.py).
+* ``_make_buffer`` degradation is loud: shrinking capacity below 64
+  episodes emits a warning and the engine records the resolved capacity in
+  ``hist["qmix"]``.
+"""
+import logging
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.runtime import cache_size, compile_guard
+from repro.core.fleet import sample_fleet_state
+from repro.core.marl.buffer import ReplayBuffer
+from repro.core.marl.networks import (attention_reduce, set_mixer_apply,
+                                      set_mixer_init)
+from repro.core.marl.qmix import QmixConfig, QmixLearner
+from repro.core.selection import (FACTORED_AUTO_N, OBS_DIM, MarlSelector,
+                                  resolve_mixer_mode)
+from repro.fl import FLConfig, run_simulation
+
+SIZES = (2.8e6, 8.4e6, 22.5e6, 44.8e6)
+FRACS = (0.11, 0.3, 0.72, 1.0)
+
+
+def _mixer_params(seed=0, state_dim=25, obs_dim=OBS_DIM):
+    return set_mixer_init(jax.random.PRNGKey(seed), state_dim, obs_dim)
+
+
+def _rand_inputs(seed, B, T, N, state_dim=25, obs_dim=OBS_DIM):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    qs = jax.random.normal(ks[0], (B, T, N))
+    obs = jax.random.normal(ks[1], (B, T, N, obs_dim))
+    state = jax.random.normal(ks[2], (B, T, state_dim))
+    return qs, obs, state
+
+
+# ---------------------------------------------------------------------------
+# mode resolution
+# ---------------------------------------------------------------------------
+
+
+def test_auto_resolution_boundary():
+    assert resolve_mixer_mode("auto", FACTORED_AUTO_N) == "flat"
+    assert resolve_mixer_mode("auto", FACTORED_AUTO_N + 1) == "set"
+    assert resolve_mixer_mode("flat", 10 ** 6) == "flat"
+    assert resolve_mixer_mode("set", 2) == "set"
+    with pytest.raises(ValueError, match="unknown mixer_mode"):
+        resolve_mixer_mode("sett", 8)
+
+
+def test_spec_roundtrip_mixer_fields():
+    from repro.fl.spec import SimulationSpec
+    cfg = FLConfig(mixer_mode="set", marl_agent_budget=128)
+    spec = SimulationSpec.from_flat(cfg)
+    assert spec.marl.mixer_mode == "set"
+    assert spec.marl.agent_budget == 128
+    assert spec.to_flat() == cfg
+    with pytest.raises(ValueError, match="marl.mixer_mode"):
+        SimulationSpec.from_flat(FLConfig(mixer_mode="sett"))
+
+
+# ---------------------------------------------------------------------------
+# set-mixer math: invariance, monotonicity, importance slot
+# ---------------------------------------------------------------------------
+
+
+def test_set_mixer_permutation_invariant():
+    p = _mixer_params()
+    qs, obs, state = _rand_inputs(1, B=3, T=4, N=17)
+    out = set_mixer_apply(p, qs, obs, state)
+    perm = np.random.default_rng(0).permutation(17)
+    out_p = set_mixer_apply(p, qs[..., perm], obs[..., perm, :], state)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_set_mixer_monotone_in_agent_qs():
+    """QMIX contract: dQ_tot/dq_i >= 0 for every agent at random points."""
+    p = _mixer_params()
+    for seed in range(3):
+        qs, obs, state = _rand_inputs(seed, B=2, T=3, N=9)
+        g = jax.grad(lambda q: set_mixer_apply(p, q, obs, state).sum())(qs)
+        assert float(g.min()) >= -1e-6, float(g.min())
+
+
+def test_set_mixer_params_independent_of_n():
+    counts = {k: sum(np.asarray(x).size for x in jax.tree.leaves(v))
+              for k, v in _mixer_params().items()}
+    # nothing in the param tree mentions an agent count: same init serves
+    # any N (the flat mixer's hyper_w1 is state_dim -> n*embed instead)
+    total = sum(counts.values())
+    assert total < 50_000, counts
+    qs, obs, state = _rand_inputs(2, B=1, T=2, N=1000)
+    out = set_mixer_apply(_mixer_params(), qs, obs, state)
+    assert out.shape == (1, 2)
+
+
+def test_logw_slot_is_exact_self_normalised_is():
+    """The key/query slot -1 trick == explicit softmax(logits + logw)."""
+    from repro.models.layers import dense_apply, mlp_apply
+    p = _mixer_params()
+    d, n_seeds = 32, 4
+    qs, obs, state = _rand_inputs(3, B=2, T=2, N=11)
+    logw = jax.random.normal(jax.random.PRNGKey(9), (2, 2, 11))
+    out = set_mixer_apply(p, qs, obs, state, logw=logw)
+
+    # reference: same embeddings, explicit reweighted softmax pooling
+    z = mlp_apply(p["obs_embed"], obs)
+    keys = dense_apply(p["key_proj"], z)                    # [..., N, d-1]
+    seeds = mlp_apply(p["hyper_q"], state).reshape((2, 2, n_seeds, d - 1))
+    logits = jnp.einsum("btsd,btnd->btsn", seeds, keys) / math.sqrt(d)
+    w = jax.nn.softmax(logits + logw[:, :, None, :], axis=-1)
+    w1 = jnp.abs(mlp_apply(p["hyper_w1"], state))
+    b1 = mlp_apply(p["hyper_b1"], state)
+    vals = jax.nn.elu(qs[..., None] * w1[..., None, :]
+                      + dense_apply(p["val_obs"], z) + b1[..., None, :])
+    pooled = jnp.einsum("btsn,btnd->btsd", w, vals).reshape((2, 2, -1))
+    w2 = jnp.abs(mlp_apply(p["hyper_w2"], state))
+    ref = jnp.sum(pooled * w2, axis=-1) + mlp_apply(
+        p["hyper_b2"], state)[..., 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_attention_reduce_agrees_with_plain_softmax():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (3, 4, 16))
+    k = jax.random.normal(ks[1], (3, 50, 16))
+    v = jax.random.normal(ks[2], (3, 50, 16))
+    out = attention_reduce(q, k, v)
+    logits = jnp.einsum("bsd,bnd->bsn", q, k) / math.sqrt(16)
+    ref = jnp.einsum("bsn,bnd->bsd", jax.nn.softmax(logits, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sampled-agent replay
+# ---------------------------------------------------------------------------
+
+
+def test_budgeted_buffer_subsamples_and_carries_logw():
+    buf = ReplayBuffer(4, episode_len=3, n_agents=20, obs_dim=OBS_DIM,
+                       state_dim=7, seed=0, agent_budget=6)
+    assert buf.N == 6 and buf.n_full == 20
+    obs = np.random.default_rng(0).normal(size=(4, 20, OBS_DIM)) \
+        .astype(np.float32)
+    buf.add_episode(obs, np.zeros((4, 7), np.float32),
+                    np.zeros((3, 20), np.int64), [1.0, 2.0, 3.0])
+    batch = buf.sample(2)
+    assert batch["obs"].shape == (1, 4, 6, OBS_DIM)
+    assert batch["actions"].shape == (1, 3, 6)
+    assert "agent_logw" in batch and batch["agent_logw"].shape == (1, 6)
+    np.testing.assert_array_equal(batch["agent_logw"], 0.0)
+    # stored columns are a real subset of the wide episode
+    idx = buf.agent_idx[0]
+    np.testing.assert_array_equal(buf.obs[0, :4], obs[:, idx])
+
+
+def test_unbudgeted_buffer_batch_keys_unchanged():
+    buf = ReplayBuffer(4, episode_len=2, n_agents=5, obs_dim=OBS_DIM,
+                       state_dim=3, seed=0)
+    buf.add_episode(np.zeros((3, 5, OBS_DIM)), np.zeros((3, 3)),
+                    np.zeros((2, 5), np.int64), [1.0, 1.0])
+    assert set(buf.sample(1)) == {"obs", "state", "actions", "rewards",
+                                  "mask"}
+
+
+def test_budgeted_buffer_nbytes_independent_of_fleet_size():
+    small = ReplayBuffer(8, 4, 512, OBS_DIM, 25, agent_budget=64)
+    large = ReplayBuffer(8, 4, 1 << 20, OBS_DIM, 25, agent_budget=64)
+    assert large.nbytes == small.nbytes
+
+
+def test_selector_trace_is_sampled_and_trains():
+    n, budget = 40, 8
+    sel = MarlSelector(n, len(SIZES), n_rounds=4, seed=0,
+                       state_mode="factored", mixer_mode="set",
+                       agent_budget=budget)
+    assert sel.n_sampled == budget
+    fleet = sample_fleet_state(n, seed=0, backend="jax")
+    for t in range(3):
+        s = sel.select(fleet, t, 4, SIZES, FRACS)
+        assert len(s.model_choice) == n          # selection: FULL fleet
+        sel.observe_reward(1.0)
+    obs, state, actions, rewards = sel.episode_arrays(fleet, 3)
+    assert obs.shape == (4, budget, OBS_DIM)     # trace: sampled agents
+    assert actions.shape == (3, budget)
+    assert state.shape[1] == sel.learner.cfg.state_dim
+    buf = ReplayBuffer(4, 3, n, OBS_DIM, state.shape[1], 0,
+                       agent_budget=budget)
+    buf.add_episode(obs, state, actions, rewards)
+    metrics = sel.learner.update(buf.sample(2))
+    assert np.isfinite(metrics["td_loss"])
+    # the sample redraws per episode
+    idx0 = sel._ep_idx.copy()
+    sel.reset_episode()
+    assert not np.array_equal(idx0, sel._ep_idx)
+
+
+def test_selector_flat_state_with_sampled_trace_keeps_full_state():
+    """mixer_mode="set" + state_mode="flat": the mixer state stays the
+    FULL fleet's n*OBS_DIM concatenation while the per-agent columns are
+    sampled."""
+    n, budget = 12, 4
+    sel = MarlSelector(n, len(SIZES), n_rounds=3, seed=1,
+                       state_mode="flat", mixer_mode="set",
+                       agent_budget=budget)
+    fleet = sample_fleet_state(n, seed=1, backend="jax")
+    for t in range(2):
+        sel.select(fleet, t, 3, SIZES, FRACS)
+        sel.observe_reward(0.5)
+    obs, state, actions, _ = sel.episode_arrays(fleet, 2)
+    assert obs.shape == (3, budget, OBS_DIM)
+    assert state.shape == (3, n * OBS_DIM)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end + parity through run_simulation
+# ---------------------------------------------------------------------------
+
+
+def _small_cfg(**kw):
+    base = dict(n_devices=8, n_rounds=3, participation=0.5, n_train=300,
+                local_epochs=1, selector="marl", seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_auto_is_bitforbit_flat_at_small_n():
+    h_auto = run_simulation(_small_cfg(mixer_mode="auto"))
+    h_flat = run_simulation(_small_cfg(mixer_mode="flat"))
+    assert h_auto["acc_mean"] == h_flat["acc_mean"]
+    assert h_auto["reward"] == h_flat["reward"]
+    assert h_auto["participants"] == h_flat["participants"]
+    assert h_auto["qmix"]["mixer_mode"] == "flat"
+
+
+def test_set_mixer_trains_end_to_end():
+    h = run_simulation(_small_cfg(n_rounds=4, mixer_mode="set",
+                                  marl_agent_budget=4))
+    q = h["qmix"]
+    assert q["mixer_mode"] == "set"
+    assert q["replay_agents"] == 4
+    assert q["updates"] >= 1
+    assert all(np.isfinite(q["td_loss"]))
+
+
+# ---------------------------------------------------------------------------
+# compile behaviour + buffer degradation telemetry
+# ---------------------------------------------------------------------------
+
+
+def _batch(B, T, N, state_dim, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "obs": rng.normal(size=(B, T + 1, N, OBS_DIM)).astype(np.float32),
+        "state": rng.normal(size=(B, T + 1, state_dim)).astype(np.float32),
+        "actions": rng.integers(0, 5, size=(B, T, N)),
+        "rewards": rng.normal(size=(B, T)).astype(np.float32),
+        "mask": np.ones((B, T), np.float32),
+        "agent_logw": np.zeros((B, N), np.float32),
+    }
+
+
+def test_set_update_one_executable_per_shape():
+    """Mirrors the dual_selection_energy_step_jit guard in test_shard.py:
+    the set-mixer training step must not retrace on same-shape batches."""
+    cfg = QmixConfig(n_agents=1000, obs_dim=OBS_DIM, num_actions=5,
+                     state_dim=25, mixer_mode="set")
+    learner = QmixLearner(cfg, jax.random.PRNGKey(0))
+    learner.update(_batch(4, 3, 16, 25))         # warm
+    if cache_size(learner._update) == 0:
+        pytest.skip("jit wrapper does not expose _cache_size")
+    with compile_guard(learner._update, max_new=0):
+        for seed in range(3):
+            learner.update(_batch(4, 3, 16, 25, seed=seed))
+    with compile_guard(learner._update, max_new=1):
+        learner.update(_batch(4, 3, 8, 25))      # new sampled-agent width
+
+
+def test_make_buffer_degradation_is_loud(caplog):
+    from repro.fl.simulation import _make_buffer
+    cfg = FLConfig(n_devices=4096, mixer_mode="flat")
+    with caplog.at_level(logging.WARNING, logger="repro.fl.simulation"):
+        buf = _make_buffer(cfg)
+    assert buf.capacity < 64
+    assert any("replay capacity degraded" in r.getMessage()
+               for r in caplog.records)
+    # the set-mixer path keeps full capacity at the same fleet size
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.fl.simulation"):
+        buf_set = _make_buffer(FLConfig(n_devices=4096, mixer_mode="set",
+                                        marl_agent_budget=256))
+    assert buf_set.capacity == 64
+    assert not caplog.records

@@ -135,6 +135,53 @@ def test_engine_runs_on_sharded_fleet():
     assert h["acc_mean"] == ref["acc_mean"]
 
 
+@multi_device
+def test_trained_set_selector_step_matches_on_mesh():
+    """A TRAINED set-mixer selector's jitted update is placement-invariant:
+    the same replay batch produces the same loss/params whether the
+    episode was traced against a single-placement or a mesh-sharded fleet
+    (shard_agent_array handles the companion [n, ...] arrays)."""
+    from repro.core.marl.buffer import ReplayBuffer
+    from repro.core.selection import OBS_DIM, MarlSelector
+    from repro.sharding.fleet import shard_agent_array
+
+    mesh = fleet_mesh()
+    n = 64 * mesh.shape[FLEET_AXIS]
+
+    def run(shard):
+        sel = MarlSelector(n, len(SIZES), n_rounds=3, seed=0,
+                           state_mode="factored", mixer_mode="set",
+                           agent_budget=16)
+        fleet = make_fleet_state(n, seed=2, backend="jax")
+        if shard:
+            fleet = shard_fleet(fleet, mesh)
+            sel.hidden = shard_agent_array(sel.hidden, mesh)
+        buf = ReplayBuffer(4, 3, n, OBS_DIM, sel.learner.cfg.state_dim, 0,
+                           agent_budget=16)
+        for t in range(3):
+            sel.select(fleet, t, 8, SIZES, FRACS)
+            sel.observe_reward(1.0)
+        buf.add_episode(*sel.episode_arrays(fleet, 3))
+        return sel.learner.update(buf.sample(4))["td_loss"]
+
+    loss_single, loss_sharded = run(False), run(True)
+    np.testing.assert_allclose(loss_single, loss_sharded,
+                               rtol=1e-5, atol=1e-6)
+
+
+@multi_device
+def test_shard_agent_array_placement_and_fallback():
+    from repro.sharding.fleet import shard_agent_array
+    mesh = fleet_mesh()
+    n_dev = mesh.shape[FLEET_AXIS]
+    x = np.zeros((16 * n_dev, 64), np.float32)
+    placed = shard_agent_array(x, mesh)
+    assert len(placed.sharding.device_set) == n_dev
+    assert not placed.sharding.is_fully_replicated
+    odd = shard_agent_array(np.zeros((16 * n_dev + 1, 64), np.float32), mesh)
+    assert odd.sharding.is_fully_replicated
+
+
 def test_dual_selection_step_one_executable_per_shape():
     """The sharded hot-path step must reuse ONE executable across rounds of
     the same shape (round_idx is traced, k/n_rounds are static) — the
