@@ -1,1 +1,7 @@
-from repro.checkpoint.io import load_pytree, save_pytree, latest_step  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    load_pytree, read_payload, save_pytree, latest_step,
+)
+from repro.checkpoint.engine import (  # noqa: F401
+    CheckpointHalt, EngineCheckpointer, config_fingerprint,
+    decode_state, encode_state, rng_state, set_rng_state,
+)

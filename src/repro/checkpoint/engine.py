@@ -1,0 +1,234 @@
+"""Full-engine checkpoints: versioned manifest + arrays file.
+
+A checkpoint is two files written atomically in order:
+
+    ep0000_step00000012.ckpt            -- every array leaf, via save_pytree
+    ep0000_step00000012.manifest.json   -- skeleton + meta, written LAST
+
+The manifest holds a *skeleton* describing the exact Python structure of
+the engine state (nested dicts incl. int keys, lists, tuples, None,
+bools, arbitrary-precision ints, exact-repr floats, strings) with array
+leaves replaced by ``{"t": "arr", "key", "dtype", "shape", "jax",
+"scalar"}`` descriptors pointing into the arrays file.  Because the
+manifest is written last with tmp+``os.replace``, a crash mid-save
+leaves at most an orphaned ``.ckpt`` that ``latest()`` never sees.
+
+Restore is **bit-for-bit**: numpy leaves come back as numpy with their
+saved dtype (float64 ``busy64`` mirrors never round-trip through jax,
+which would downcast them with x64 disabled), jax leaves come back as
+jax arrays, python floats round-trip exactly through JSON repr.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.io import load_pytree, save_pytree
+
+MANIFEST_VERSION = 1
+_NAME_RE = re.compile(r"ep(\d+)_step(\d+)\.manifest\.json$")
+
+# FLConfig fields that describe *how this process runs* rather than what
+# is being computed — excluded from the resume-compatibility fingerprint
+# so e.g. resuming into a different checkpoint directory is legal.
+FINGERPRINT_EXCLUDE = ("checkpoint_dir", "checkpoint_every",
+                       "checkpoint_keep", "resume", "log_every")
+
+
+class CheckpointHalt(RuntimeError):
+    """Raised by the engine right after a scheduled checkpoint save when a
+    test/bench asked for a simulated crash (``halt_after_saves``)."""
+
+
+def config_fingerprint(cfg: Any) -> str:
+    """Stable hash of the semantic config; mismatch blocks resume."""
+    d = dataclasses.asdict(cfg)
+    for k in FINGERPRINT_EXCLUDE:
+        d.pop(k, None)
+    blob = json.dumps(d, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def rng_state(gen: Optional[np.random.Generator]) -> Optional[dict]:
+    """JSON-able snapshot of a numpy Generator (arbitrary-precision ints)."""
+    if gen is None:
+        return None
+    return gen.bit_generator.state
+
+
+def set_rng_state(gen: np.random.Generator, state: dict) -> None:
+    gen.bit_generator.state = state
+
+
+# ----------------------------------------------------------------------
+# skeleton encode / decode
+# ----------------------------------------------------------------------
+
+def encode_state(tree: Any) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Split a state tree into a JSON-able skeleton + flat array dict."""
+    arrays: Dict[str, np.ndarray] = {}
+
+    def enc(x: Any) -> Any:
+        if x is None:
+            return {"t": "none"}
+        # np scalars keep their dtype via the array path below; np.float64
+        # subclasses python float, so it must be screened out here
+        if isinstance(x, bool) and not isinstance(x, np.generic):
+            return {"t": "bool", "v": x}
+        if isinstance(x, int) and not isinstance(x, np.generic):
+            return {"t": "int", "v": x}
+        if isinstance(x, float) and not isinstance(x, np.generic):
+            return {"t": "float", "v": x}       # json repr round-trips exactly
+        if isinstance(x, str):
+            return {"t": "str", "v": x}
+        if isinstance(x, dict):
+            for k in x:
+                if not isinstance(k, (str, int)):
+                    raise TypeError(f"unsupported dict key type {type(k)}")
+            return {"t": "dict", "k": list(x.keys()),
+                    "v": [enc(v) for v in x.values()]}
+        if isinstance(x, tuple):
+            return {"t": "tuple", "v": [enc(v) for v in x]}
+        if isinstance(x, list):
+            return {"t": "list", "v": [enc(v) for v in x]}
+        if isinstance(x, (np.ndarray, np.generic)) or isinstance(x, jax.Array):
+            is_jax = isinstance(x, jax.Array)
+            # jaxlint: allow(host-sync-in-hot-path) -- checkpoint save is an
+            # explicit barrier; every leaf must land on the host to persist.
+            a = np.asarray(x)
+            key = f"a{len(arrays):06d}"
+            arrays[key] = a
+            return {"t": "arr", "key": key, "dtype": str(a.dtype),
+                    "shape": list(a.shape), "jax": is_jax,
+                    "scalar": isinstance(x, np.generic)}
+        raise TypeError(f"unsupported leaf type in engine state: {type(x)}")
+
+    return enc(tree), arrays
+
+
+def decode_state(skeleton: dict, arrays: Dict[str, np.ndarray]) -> Any:
+    import jax.numpy as jnp
+
+    def dec(d: dict) -> Any:
+        t = d["t"]
+        if t == "none":
+            return None
+        if t in ("bool", "int", "float", "str"):
+            return d["v"]
+        if t == "dict":
+            return {k: dec(v) for k, v in zip(d["k"], d["v"])}
+        if t == "tuple":
+            return tuple(dec(v) for v in d["v"])
+        if t == "list":
+            return [dec(v) for v in d["v"]]
+        if t == "arr":
+            a = arrays[d["key"]]
+            if d.get("scalar"):
+                return a[()]
+            return jnp.asarray(a) if d["jax"] else a
+        raise ValueError(f"unknown skeleton tag {t!r}")
+
+    return dec(skeleton)
+
+
+def _collect_array_descs(skeleton: Any, out: Dict[str, dict]) -> None:
+    if isinstance(skeleton, dict):
+        if skeleton.get("t") == "arr":
+            out[skeleton["key"]] = skeleton
+            return
+        for v in skeleton.values():
+            _collect_array_descs(v, out)
+    elif isinstance(skeleton, (list, tuple)):
+        for v in skeleton:
+            _collect_array_descs(v, out)
+
+
+# ----------------------------------------------------------------------
+# checkpointer
+# ----------------------------------------------------------------------
+
+class EngineCheckpointer:
+    """Keep-last-k rotating full-engine checkpoints in one directory."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = max(1, int(keep))
+        os.makedirs(directory, exist_ok=True)
+
+    def _stem(self, episode: int, step: int) -> str:
+        return os.path.join(self.directory,
+                            f"ep{episode:04d}_step{step:08d}")
+
+    def save(self, state: Any, meta: Dict[str, Any]) -> str:
+        episode = int(meta.get("episode", 0))
+        step = int(meta["step"])
+        stem = self._stem(episode, step)
+        skeleton, arrays = encode_state(state)
+        save_pytree(stem + ".ckpt", arrays)
+        manifest = {"format": "drfl-engine", "version": MANIFEST_VERSION,
+                    "meta": dict(meta),
+                    "arrays_file": os.path.basename(stem) + ".ckpt",
+                    "skeleton": skeleton}
+        tmp = stem + ".manifest.json.tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, stem + ".manifest.json")
+        self._rotate()
+        return stem + ".manifest.json"
+
+    # jaxlint: allow(host-sync-in-hot-path) -- int() of regex match
+    # groups (filenames), no device values in sight
+    def _manifests(self) -> List[Tuple[Tuple[int, int], str]]:
+        out = []
+        if not os.path.isdir(self.directory):
+            return out
+        for name in os.listdir(self.directory):
+            m = _NAME_RE.match(name)
+            if m:
+                out.append(((int(m.group(1)), int(m.group(2))),
+                            os.path.join(self.directory, name)))
+        return sorted(out)
+
+    def latest(self) -> Optional[str]:
+        ms = self._manifests()
+        return ms[-1][1] if ms else None
+
+    def _rotate(self) -> None:
+        ms = self._manifests()
+        for _, path in ms[:-self.keep]:
+            ckpt = path[:-len(".manifest.json")] + ".ckpt"
+            for p in (path, ckpt):
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+
+    def load(self, path: Optional[str] = None) -> Tuple[Any, Dict[str, Any]]:
+        path = path or self.latest()
+        if path is None:
+            raise FileNotFoundError(
+                f"no engine checkpoint found in {self.directory!r}")
+        with open(path) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != "drfl-engine":
+            raise ValueError(f"{path!r} is not an engine checkpoint manifest")
+        if manifest.get("version") != MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest version {manifest.get('version')} unsupported "
+                f"(this build reads version {MANIFEST_VERSION})")
+        descs: Dict[str, dict] = {}
+        _collect_array_descs(manifest["skeleton"], descs)
+        template = {k: np.zeros(tuple(d["shape"]), np.dtype(d["dtype"]))
+                    for k, d in descs.items()}
+        arrays_path = os.path.join(os.path.dirname(path),
+                                   manifest["arrays_file"])
+        arrays = load_pytree(arrays_path, template, backend="numpy")
+        state = decode_state(manifest["skeleton"], arrays)
+        return state, manifest["meta"]

@@ -63,6 +63,8 @@ def _path_str(kp) -> str:
     return "/".join(parts)
 
 
+# jaxlint: allow(host-sync-in-hot-path) -- checkpoint save is an explicit
+# barrier: every leaf must land on the host to persist
 def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
     if step is not None:
         os.makedirs(path, exist_ok=True)
@@ -70,8 +72,12 @@ def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
     payload = {"__meta__": {"version": 1}}
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     for kp, leaf in leaves:
+        key = _path_str(kp)
+        if key in payload:
+            raise ValueError(f"duplicate leaf path {key!r}: two pytree "
+                             "leaves flatten to the same checkpoint key")
         arr = np.asarray(leaf)
-        payload[_path_str(kp)] = {
+        payload[key] = {
             "dtype": str(arr.dtype), "shape": list(arr.shape),
             "data": arr.tobytes(),
         }
@@ -83,11 +89,30 @@ def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
     return path
 
 
-def load_pytree(path: str, template: Any) -> Any:
+def read_payload(path: str) -> dict:
+    """Decompress + unpack a checkpoint file into its raw payload map.
+
+    Raises ValueError on truncated or corrupted files (codec / msgpack
+    errors are chained) so callers get one predictable error type.
+    """
     with open(path, "rb") as f:
-        raw = _decompress(f.read())
-    payload = msgpack.unpackb(raw, raw=False)
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(template), None
+        blob = f.read()
+    try:
+        raw = _decompress(blob)
+        payload = msgpack.unpackb(raw, raw=False)
+    except RuntimeError:
+        raise                      # zstd-without-library: keep the message
+    except Exception as e:
+        raise ValueError(f"corrupt or truncated checkpoint {path!r}: "
+                         f"{type(e).__name__}: {e}") from e
+    if not isinstance(payload, dict) or "__meta__" not in payload:
+        raise ValueError(f"corrupt checkpoint {path!r}: missing __meta__")
+    return payload
+
+
+def load_pytree(path: str, template: Any, backend: str = "jax") -> Any:
+    payload = read_payload(path)
+    leaves = jax.tree_util.tree_flatten_with_path(template)
     kps, tmpl_leaves = zip(*leaves[0]) if leaves[0] else ((), ())
     treedef = jax.tree_util.tree_structure(template)
     out = []
@@ -101,7 +126,11 @@ def load_pytree(path: str, template: Any) -> Any:
         if tuple(arr.shape) != tuple(np.shape(tl)):
             raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} "
                              f"vs template {np.shape(tl)}")
-        out.append(jnp.asarray(arr))
+        want = np.dtype(getattr(tl, "dtype", None) or np.asarray(tl).dtype)
+        if arr.dtype != want:
+            raise ValueError(f"dtype mismatch at {key}: ckpt {arr.dtype} "
+                             f"vs template {want}")
+        out.append(jnp.asarray(arr) if backend == "jax" else arr.copy())
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

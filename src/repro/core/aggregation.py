@@ -57,6 +57,43 @@ def tree_path_align(ref, other, _path=()):
         yield _path, other
 
 
+#: default per-element magnitude ceiling for client deltas — far above any
+#: legitimate local-SGD delta, so only corrupted/diverged payloads trip it
+DELTA_MAG_CAP = 1e8
+
+
+def delta_valid(delta, mag_cap: float = DELTA_MAG_CAP):
+    """Device-side scalar bool: every leaf of ``delta`` is finite and within
+    ``mag_cap`` in magnitude.  The per-client gate of the quarantine layer
+    (graceful degradation: a poisoned update must never reach the global
+    params)."""
+    ok = jnp.asarray(True)
+    for leaf in jax.tree.leaves(delta):
+        fin = jnp.isfinite(leaf)
+        ok = ok & fin.all()
+        safe = jnp.where(fin, leaf, 0)
+        ok = ok & (jnp.max(jnp.abs(safe), initial=0.0) <= mag_cap)
+    return ok
+
+
+def sanitize_delta(delta):
+    """Zero every non-finite element.  Quarantine zeroes a bad client's
+    MASK, but 0 * nan = nan, so the numerator needs finite operands; for
+    all-finite deltas ``where`` is an exact element copy (bit-for-bit)."""
+    return jax.tree.map(
+        lambda u: jnp.where(jnp.isfinite(u), u, jnp.zeros_like(u)), delta)
+
+
+def stacked_rows_valid(U, mag_cap: float = DELTA_MAG_CAP):
+    """[N] bool from stacked client rows [N, R, seg]: finite everywhere and
+    within ``mag_cap`` — vectorized :func:`delta_valid` for the stacked
+    aggregation path."""
+    fin = jnp.isfinite(U)
+    safe = jnp.where(fin, U, 0.0)
+    return (fin.all(axis=(1, 2))
+            & (jnp.max(jnp.abs(safe), axis=(1, 2)) <= mag_cap))
+
+
 def fedavg(updates: Sequence, weights: Optional[Sequence[float]] = None):
     """Plain FedAvg over pytrees (Eq. 2). ``weights`` ~ client data sizes."""
     n = len(updates)

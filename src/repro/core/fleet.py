@@ -362,6 +362,33 @@ def fleet_disconnect(fleet: FleetState, start: int) -> FleetState:
         alive=fleet.alive & ~out)
 
 
+def _index_mask(fleet: FleetState, indices) -> Array:
+    """[n] bool mask with True at ``indices`` (host-built, backend-cast)."""
+    m = np.zeros(len(fleet), bool)
+    m[np.asarray(indices, np.int64)] = True
+    return _xp(fleet).asarray(m)
+
+
+def fleet_kill(fleet: FleetState, indices) -> FleetState:
+    """Hard-crash ``indices``: battery spent (remaining -> 0), alive ->
+    False — the FaultPlan "crash" arm.  Any energy already deducted for an
+    in-flight task stays deducted (it was wasted)."""
+    mask = _index_mask(fleet, indices)
+    xp = _xp(fleet)
+    return fleet.replace(
+        remaining=xp.where(mask, 0.0, fleet.remaining),
+        alive=fleet.alive & ~mask)
+
+
+def fleet_set_alive(fleet: FleetState, indices, value: bool) -> FleetState:
+    """Set liveness at ``indices`` WITHOUT touching energy — transient
+    disconnect (value=False) and rejoin (value=True) keep the battery, in
+    contrast to :func:`fleet_kill` / :func:`fleet_connect`."""
+    mask = _index_mask(fleet, indices)
+    alive = (fleet.alive | mask) if value else (fleet.alive & ~mask)
+    return fleet.replace(alive=alive)
+
+
 def set_modes(fleet: FleetState, modes: Sequence[str]) -> FleetState:
     """Apply per-device power modes (eco/normal/turbo), keeping the
     multiplier arrays and the label metadata consistent."""

@@ -101,6 +101,37 @@ class ReplayBuffer:
             out["agent_logw"] = self.agent_logw[idx]
         return out
 
+    def state_dict(self) -> Dict:
+        """Checkpointable snapshot incl. the sampled-agent columns and the
+        numpy Generator state (arbitrary-precision ints, JSON-able)."""
+        return {
+            "obs": self.obs, "state": self.state, "actions": self.actions,
+            "rewards": self.rewards, "mask": self.mask,
+            "agent_idx": self.agent_idx, "agent_logw": self.agent_logw,
+            "ptr": self.ptr, "size": self.size,
+            "rng": self.rng.bit_generator.state,
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        for name in ("obs", "state", "actions", "rewards", "mask"):
+            arr = np.asarray(state[name])
+            if arr.shape != getattr(self, name).shape:
+                raise ValueError(f"replay buffer {name} shape mismatch: "
+                                 f"ckpt {arr.shape} vs "
+                                 f"{getattr(self, name).shape}")
+            setattr(self, name, arr)
+        for name in ("agent_idx", "agent_logw"):
+            have = getattr(self, name) is not None
+            got = state.get(name) is not None
+            if have != got:
+                raise ValueError(f"replay buffer {name} presence mismatch "
+                                 "(agent_budget differs from checkpoint)")
+            if got:
+                setattr(self, name, np.asarray(state[name]))
+        self.ptr = int(state["ptr"])
+        self.size = int(state["size"])
+        self.rng.bit_generator.state = state["rng"]
+
     @property
     def nbytes(self) -> int:
         """Resident replay bytes (the BENCH_marl_train 'replay RSS' row)."""

@@ -94,6 +94,18 @@ class QmixLearner:
         metrics = jax.device_get(metrics)
         return {k: float(v) for k, v in metrics.items()}
 
+    def state_dict(self) -> Dict:
+        """Checkpointable snapshot: everything but the jitted closures
+        (those are rebuilt from ``cfg`` on construction)."""
+        return {"params": self.params, "target": self.target,
+                "opt": self.opt, "updates": self.updates}
+
+    def load_state_dict(self, state: Dict) -> None:
+        self.params = state["params"]
+        self.target = state["target"]
+        self.opt = state["opt"]
+        self.updates = int(state["updates"])
+
 
 def _act(cfg: QmixConfig, params, obs, hidden, key, eps, avail):
     """avail: [N, A] bool — affordability action mask (unaffordable model

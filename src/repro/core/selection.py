@@ -103,6 +103,26 @@ class SelectorBase:
         at a synchronous round barrier."""
         pass
 
+    def state_dict(self) -> dict:
+        """Checkpointable snapshot of selector-internal mutable state.
+
+        Baselines with a numpy Generator persist its bit_generator state;
+        stateless selectors persist nothing.  Restoring into a freshly
+        constructed selector of the same config must reproduce the
+        uninterrupted decision sequence bit-for-bit."""
+        rng = getattr(self, "rng", None)
+        if rng is not None:
+            return {"kind": "rng", "rng": rng.bit_generator.state}
+        return {"kind": "stateless"}
+
+    def load_state_dict(self, state: dict) -> None:
+        kind = state.get("kind")
+        if kind == "rng":
+            self.rng.bit_generator.state = state["rng"]
+        elif kind != "stateless":
+            raise ValueError(f"selector snapshot kind {kind!r} does not "
+                             f"match selector {self.name!r}")
+
 
 def obs_vector(dev: DeviceState, round_idx: int, n_rounds: int) -> np.ndarray:
     """Paper Eq. 9: s_t^n = [L_n, C_n, E_n, t] (+ last-round latencies,
@@ -348,6 +368,48 @@ class MarlSelector(SelectorBase):
         # jaxlint: allow(host-sync-in-hot-path) -- end-of-episode flush: the reward buffer is a Python-float list
         rewards = np.asarray(self.ep_rewards, np.float32)
         return obs, state, np.stack(self.ep_actions), rewards
+
+    def state_dict(self) -> dict:
+        """Full mid-episode snapshot: QMIX learner (online/target/opt/
+        update counter), act key, GRU hidden, epsilon schedule position,
+        the episode trace, and both host RNGs — everything needed so a
+        resumed run's decision stream is bit-for-bit the uninterrupted
+        one."""
+        return {
+            "kind": "marl",
+            "learner": self.learner.state_dict(),
+            "key": self.key,
+            "hidden": self.hidden,
+            "total_rounds": self.total_rounds,
+            "last_pricing": self._last_pricing,
+            "sample_rng": self._sample_rng.bit_generator.state,
+            "ep_idx": self._ep_idx,
+            "ep_obs": list(self.ep_obs),
+            "ep_state": list(self.ep_state),
+            "ep_actions": list(self.ep_actions),
+            "ep_rewards": list(self.ep_rewards),
+        }
+
+    # jaxlint: allow(host-sync-in-hot-path) -- one-time resume from a
+    # checkpoint; restored leaves are host numpy already
+    def load_state_dict(self, state: dict) -> None:
+        if state.get("kind") != "marl":
+            raise ValueError("checkpoint selector snapshot is "
+                             f"{state.get('kind')!r}, not 'marl' — selector "
+                             "config drifted since save")
+        self.learner.load_state_dict(state["learner"])
+        self.key = jnp.asarray(state["key"])
+        self.hidden = jnp.asarray(state["hidden"])
+        self.total_rounds = int(state["total_rounds"])
+        lp = state["last_pricing"]
+        self._last_pricing = tuple(lp) if lp is not None else None
+        self._sample_rng.bit_generator.state = state["sample_rng"]
+        ep_idx = state["ep_idx"]
+        self._ep_idx = None if ep_idx is None else np.asarray(ep_idx)
+        self.ep_obs = list(state["ep_obs"])
+        self.ep_state = list(state["ep_state"])
+        self.ep_actions = list(state["ep_actions"])
+        self.ep_rewards = [float(r) for r in state["ep_rewards"]]
 
 
 class GreedySelector(SelectorBase):

@@ -1,9 +1,11 @@
 from repro.fl.simulation import FLConfig, run_simulation  # noqa: F401
 from repro.fl.spec import (EnergySpec, EngineSpec, MarlSpec,  # noqa: F401
-                           ModelSpec, SimulationSpec, ensure_flat_config)
+                           ModelSpec, ResilienceSpec, SimulationSpec,
+                           ensure_flat_config)
 from repro.fl.engine import (RoundEngine, build_world,  # noqa: F401
                              resolve_client_executor, sync_task_budget)
 from repro.fl.environment import FLEnv, FLEnvConfig  # noqa: F401
+from repro.fl.faults import FaultEvent, FaultPlan  # noqa: F401
 from repro.core.fleet import (FleetState, fleet_summary,  # noqa: F401
                               make_fleet_state, sample_fleet_state,
                               summary_width)

@@ -54,23 +54,36 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.engine import (CheckpointHalt, EngineCheckpointer,
+                                     config_fingerprint)
+from repro.checkpoint.io import FLEET_CHECKPOINT_FIELDS
 from repro.core.fleet import (FleetState, fleet_charge_jit, fleet_connect,
                               fleet_cost_matrix_jit, fleet_disconnect,
-                              fleet_is_jax, fleet_set_busy,
-                              fleet_total_remaining, make_fleet_state)
+                              fleet_is_jax, fleet_kill, fleet_set_alive,
+                              fleet_set_busy, fleet_total_remaining,
+                              make_fleet_state)
 from repro.core.selection import MarlSelector
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import synthetic_image_dataset
 from repro.fl import batch as fl_batch
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
+from repro.fl.faults import FaultPlan, poison_payload
 from repro.models.family import ModelFamily, get_family
+
+
+class _RestoredBucket(NamedTuple):
+    """Stand-in for a BucketResult restored from a checkpoint: the task's
+    own row was sliced to ``[1, ...]`` at save time, so row index 0 of this
+    bucket reproduces the original ``bucket.stacked_delta[row:row+1]``
+    slice bit-for-bit."""
+    stacked_delta: Any
 
 
 # ---------------------------------------------------------------------------
@@ -248,24 +261,184 @@ class RoundEngine:
     ``selector`` and (for MARL) ``buffer`` are owned by the caller —
     :func:`repro.fl.simulation.run_simulation` persists them across
     pre-training episodes exactly as the legacy loop did.
+
+    Crash safety (opt-in, off by default so clean runs stay bit-for-bit):
+
+    * ``cfg.checkpoint_dir`` + ``cfg.checkpoint_every`` — snapshot the FULL
+      run state (fleet arrays, params, history, event heap, selector +
+      replay buffer, partitions) every N rounds / virtual rounds via
+      :class:`repro.checkpoint.engine.EngineCheckpointer`; pass the decoded
+      state back as ``resume_state`` and the run continues byte-identically
+      to one that was never interrupted.
+    * ``fault_plan`` (or the ``cfg.fault_*`` counts) — seeded churn events
+      injected into the async timeline; see :mod:`repro.fl.faults`.
+    * ``halt_counter`` — ``{"remaining": N}`` shared dict: raise
+      :class:`CheckpointHalt` right after the N-th checkpoint save (the
+      test/bench hook that simulates a crash at a known point).
     """
 
-    def __init__(self, cfg, selector, buffer=None, verbose: bool = False):
+    def __init__(self, cfg, selector, buffer=None, verbose: bool = False, *,
+                 fault_plan: Optional[FaultPlan] = None, episode: int = 0,
+                 resume_state: Optional[dict] = None,
+                 halt_counter: Optional[dict] = None):
         self.cfg = cfg
         self.selector = selector
         self.buffer = buffer
         self.verbose = verbose
         self.mode = getattr(cfg, "engine_mode", "sync")
         self.executor = resolve_client_executor(cfg)
+        self.episode = int(episode)
+        self.faults = (fault_plan if fault_plan is not None
+                       else FaultPlan.from_config(cfg))
+        if self.faults is not None and not len(self.faults):
+            self.faults = None
+        if self.faults is not None and self.mode == "sync":
+            raise ValueError("fault injection needs the event timeline: "
+                             "set engine_mode='async'")
+        self.ckpt = None
+        if getattr(cfg, "checkpoint_dir", ""):
+            self.ckpt = EngineCheckpointer(
+                cfg.checkpoint_dir, keep=int(getattr(cfg, "checkpoint_keep",
+                                                     3)))
+        self.ckpt_every = int(getattr(cfg, "checkpoint_every", 0))
+        self._halt = halt_counter
+        self._resume = resume_state
+        self._qpend: List[Any] = []   # (info, device validity array) pairs
 
     def run(self) -> Dict:
         self.world = build_world(self.cfg)
+        rs = self._resume
+        if rs is not None:
+            if rs.get("mode") != self.mode:
+                raise ValueError(
+                    f"checkpoint was taken in engine_mode={rs.get('mode')!r}"
+                    f" but this engine runs {self.mode!r}")
+            # partitions/selector/buffer are mode-independent run state
+            self.world.parts = [np.asarray(p) for p in rs["parts"]]  # jaxlint: allow(host-sync-in-hot-path) -- restored checkpoint leaves are host numpy
+            self.selector.load_state_dict(rs["selector"])
+            if rs.get("buffer") is not None:
+                if self.buffer is None:
+                    raise ValueError("checkpoint carries replay-buffer state"
+                                     " but the engine has no buffer")
+                self.buffer.load_state_dict(rs["buffer"])
         if self.mode == "sync":
             return self._run_sync()
         if self.mode == "async":
             return self._run_async()
         raise ValueError(f"unknown engine_mode {self.mode!r} "
                          "(expected 'sync' or 'async')")
+
+    # ------------------------------------------------------------------
+    # checkpoint plumbing (shared by both modes)
+    # ------------------------------------------------------------------
+
+    def _ckpt_meta(self, step: int) -> dict:
+        return {"episode": self.episode, "step": int(step),
+                "engine_mode": self.mode,
+                "fingerprint": config_fingerprint(self.cfg)}
+
+    # jaxlint: allow(host-sync-in-hot-path) -- checkpoint encode runs at
+    # save cadence, off the per-event loop; the save IS the barrier
+    def _base_snapshot(self, fleet, global_params, hist) -> dict:
+        """Mode-independent slice of the run state (fleet arrays keyed by
+        the lint-enforced ``FLEET_CHECKPOINT_FIELDS``, so a new FleetState
+        array field fails loudly here rather than silently not resuming)."""
+        return {
+            "mode": self.mode,
+            "fleet": {f: getattr(fleet, f)
+                      for f in FLEET_CHECKPOINT_FIELDS},
+            "global_params": global_params,
+            "hist": hist,
+            "parts": [np.asarray(p) for p in self.world.parts],
+            "selector": self.selector.state_dict(),
+            "buffer": (self.buffer.state_dict()
+                       if self.buffer is not None else None),
+        }
+
+    def _restore_fleet(self, fleet, arrays: dict):
+        fleet = fleet.replace(**arrays)
+        if getattr(self.cfg, "fleet_mesh", 0) not in (0, 1):
+            from repro.sharding.fleet import maybe_shard_fleet
+            fleet = maybe_shard_fleet(fleet, self.cfg.fleet_mesh)
+        return fleet
+
+    @staticmethod
+    # jaxlint: allow(host-sync-in-hot-path) -- task fields are python
+    # scalars; runs only at checkpoint save
+    def _encode_task(task: dict, params_table: dict) -> dict:
+        """Serializable form of an async task.  A batched task's shared
+        ``(BucketResult, row)`` reference becomes its own ``[1, ...]`` row
+        slice (the exact tree the completion event would have sliced); a
+        perclient task's dispatch-time params snapshot is deduped into
+        ``params_table`` by model version (tasks from one dispatch tick
+        share one snapshot)."""
+        enc = {k: v for k, v in task.items()
+               if k not in ("delta_row", "params")}
+        if "delta_row" in task:
+            dr = task["delta_row"]
+            enc["has_delta_row"] = True
+            enc["delta1"] = (None if dr is None else jax.tree.map(
+                lambda a: a[dr[1]:dr[1] + 1], dr[0].stacked_delta))
+        elif "params" in task:
+            v = int(task["version"])
+            params_table[v] = task["params"]
+            enc["params_version"] = v
+        return enc
+
+    @staticmethod
+    # jaxlint: allow(host-sync-in-hot-path) -- restore-only inverse of
+    # _encode_task; manifest values are host state
+    def _decode_task(enc: dict, params_table: dict) -> dict:
+        task = {k: v for k, v in enc.items()
+                if k not in ("delta1", "has_delta_row", "params_version")}
+        if enc.get("has_delta_row"):
+            d1 = enc["delta1"]
+            # row 0 of the restored one-row bucket IS the original slice,
+            # so the completion-event jit program (and its output bits)
+            # match the uninterrupted run
+            task["delta_row"] = (None if d1 is None
+                                 else (_RestoredBucket(d1), 0))
+        elif "params_version" in enc:
+            task["params"] = params_table[int(enc["params_version"])]
+        return task
+
+    def _after_save(self):
+        if self._halt is None:
+            return
+        self._halt["remaining"] -= 1
+        if self._halt["remaining"] <= 0:
+            raise CheckpointHalt(
+                "simulated crash: halted after checkpoint save")
+
+    def _flush_quarantine(self, hist) -> None:
+        """Drain pending validity verdicts into ``hist["faults"]``.
+
+        Aggregation calls record (context, device-bool-array) pairs; the
+        arrays stay on device until a natural barrier (finalize or a
+        checkpoint save) flushes them in ONE batched pull.  Entries append
+        in aggregation order regardless of when flushes happen, so the
+        final ``quarantined`` list is identical across checkpoint cadences
+        — which is what makes resumed histories byte-comparable."""
+        if not self._qpend:
+            return
+        f = hist.get("faults")
+        if f is None:
+            f = hist["faults"] = {"events": [], "quarantined": [],
+                                  "n_reaped": 0, "n_quarantined": 0}
+        # jaxlint: allow(host-sync-in-hot-path) -- one batched validity pull at a barrier (finalize / checkpoint save), not per aggregation
+        vals = jax.device_get([v for _, v in self._qpend])
+        for (info, _), v in zip(self._qpend, vals):
+            flat = np.atleast_1d(np.asarray(v))
+            for j, dev in enumerate(info["devices"]):
+                if dev is None or j >= len(flat) or bool(flat[j]):
+                    continue
+                rec = {k: info[k] for k in info
+                       if k not in ("devices", "models")}
+                rec["device"] = int(dev)
+                rec["m"] = int(info["models"][j])
+                f["quarantined"].append(rec)
+                f["n_quarantined"] += 1
+        self._qpend.clear()
 
     # ------------------------------------------------------------------
     # sync mode — barrier rounds, bit-for-bit the legacy loop
@@ -285,20 +458,36 @@ class RoundEngine:
             # gathers mini-batches on device instead of per-step host copies
             x_dev, y_dev = jnp.asarray(w.x_tr), jnp.asarray(w.y_tr)
 
-        hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
-                "alive": [], "participants": [], "model_choices": [],
-                "reward": [], "wall_clock": [], "sim_time": [], "idle": [],
-                "dropouts": 0, "idle_time": 0.0, "engine": "sync"}
-        prev_acc = float(np.mean(
-            fl_server.evaluate(global_params, w.x_val, w.y_val,
-                               family=w.family)))
-        e_prev = fleet_total_remaining(fleet)
         w1, w2, w3 = cfg.reward_weights
-        sim_time = 0.0
-        n_agg = 0
-        hotplug_done = False
+        rs = self._resume
+        if rs is None:
+            hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
+                    "alive": [], "participants": [], "model_choices": [],
+                    "reward": [], "wall_clock": [], "sim_time": [], "idle": [],
+                    "dropouts": 0, "idle_time": 0.0, "engine": "sync",
+                    "faults": {"events": [], "quarantined": [],
+                               "n_reaped": 0, "n_quarantined": 0}}
+            prev_acc = float(np.mean(
+                fl_server.evaluate(global_params, w.x_val, w.y_val,
+                                   family=w.family)))
+            e_prev = fleet_total_remaining(fleet)
+            sim_time = 0.0
+            n_agg = 0
+            hotplug_done = False
+            t_start = 0
+        else:
+            fleet = self._restore_fleet(fleet, rs["fleet"])
+            global_params = rs["global_params"]
+            hist = rs["hist"]
+            prev_acc = float(rs["prev_acc"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            e_prev = float(rs["e_prev"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            sim_time = float(rs["sim_time"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            n_agg = int(rs["n_agg"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            hotplug_done = bool(rs["hotplug_done"])
+            t_start = int(rs["next_round"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+        fleet_dead = False
 
-        for t in range(cfg.n_rounds):
+        for t in range(t_start, cfg.n_rounds):
             t0 = time.time()
             if (cfg.hotplug_n and not hotplug_done
                     and t >= cfg.hotplug_round):
@@ -350,16 +539,29 @@ class RoundEngine:
                     [fl_client.client_update_seed(cfg.seed, t, i)
                      for i in cohort], x_dev, y_dev)
                 if cfg.method == "drfl":
-                    global_params = fl_server.aggregate_drfl_stacked(
+                    global_params, valid = fl_server.aggregate_drfl_stacked(
                         global_params,
                         [(b.model_idx, b.stacked_delta, b.weights, None)
                          for b in res.buckets], server_lr=cfg.server_lr,
-                        family=w.family)
+                        family=w.family, with_stats=True)
+                    devs, models = [], []
+                    for b in res.buckets:
+                        pad = len(b.weights) - len(b.participants)
+                        devs += list(b.participants) + [None] * pad
+                        models += [b.model_idx] * len(b.weights)
+                    if valid is not None:
+                        self._qpend.append((
+                            {"devices": devs, "models": models, "round": t,
+                             "time": sim_time}, valid))
                 else:
                     contribs = res.unstacked()
-                    global_params = fl_server.aggregate_sliced(
+                    global_params, valid = fl_server.aggregate_sliced(
                         global_params, [c[2] for c in contribs],
-                        [c[3] for c in contribs])
+                        [c[3] for c in contribs], with_stats=True)
+                    self._qpend.append((
+                        {"devices": [c[0] for c in contribs],
+                         "models": [c[1] for c in contribs], "round": t,
+                         "time": sim_time}, valid))
                 n_agg += 1
             elif cohort:
                 deltas, idxs, weights = [], [], []
@@ -374,12 +576,16 @@ class RoundEngine:
                     idxs.append(m)
                     weights.append(float(len(xi)))
                 if cfg.method == "drfl":
-                    global_params = fl_server.aggregate_drfl(
+                    global_params, valid = fl_server.aggregate_drfl(
                         global_params, deltas, idxs, weights,
-                        server_lr=cfg.server_lr, family=w.family)
+                        server_lr=cfg.server_lr, family=w.family,
+                        with_stats=True)
                 else:
-                    global_params = fl_server.aggregate_sliced(
-                        global_params, deltas, weights)
+                    global_params, valid = fl_server.aggregate_sliced(
+                        global_params, deltas, weights, with_stats=True)
+                self._qpend.append((
+                    {"devices": list(cohort), "models": idxs, "round": t,
+                     "time": sim_time}, valid))
                 n_agg += 1
 
             accs = fl_server.evaluate(global_params, w.x_val, w.y_val,
@@ -420,8 +626,23 @@ class RoundEngine:
                       f" energy={e_now:,.0f}J time={t_round:.1f}s"
                       f" r={reward:+.2f}")
             if alive_now == 0:
+                fleet_dead = True
                 break
+            if (self.ckpt is not None and self.ckpt_every > 0
+                    and (t + 1) % self.ckpt_every == 0):
+                self._flush_quarantine(hist)
+                state = self._base_snapshot(fleet, global_params, hist)
+                state.update(next_round=t + 1, prev_acc=prev_acc,
+                             e_prev=e_prev, sim_time=sim_time, n_agg=n_agg,
+                             hotplug_done=hotplug_done)
+                self.ckpt.save(state, self._ckpt_meta(t + 1))
+                self._after_save()
 
+        hist["terminated"] = {
+            "reason": "fleet_dead" if fleet_dead else "completed",
+            "rounds": len(hist["acc_mean"]), "n_rounds": cfg.n_rounds,
+            "sim_time": sim_time,
+        }
         hist["n_aggregations"] = n_agg
         hist["sim_time_total"] = sim_time
         return self._finalize(hist, global_params)
@@ -447,37 +668,91 @@ class RoundEngine:
         if self.executor == "batched":
             x_dev, y_dev = jnp.asarray(w.x_tr), jnp.asarray(w.y_tr)
 
-        hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
-                "alive": [], "participants": [], "model_choices": [],
-                "reward": [], "wall_clock": [], "sim_time": [], "idle": [],
-                "staleness": [], "task_log": [], "dropouts": 0,
-                "idle_time": 0.0, "wait_for_work": 0.0, "hotplug": None,
-                "engine": "async"}
-        acc_prev = float(np.mean(
-            fl_server.evaluate(global_params, w.x_val, w.y_val,
-                               family=w.family)))
+        deadline_factor = float(getattr(cfg, "task_deadline_factor", 4.0))
+        # per-task deadlines (and their reap events) exist only when faults
+        # are injected: a reap pop re-runs refill(), which can consume
+        # selector RNG, so clean runs must not see ANY reap events if their
+        # timelines are to stay bit-for-bit with earlier releases
+        reaping = self.faults is not None
+        tasks: Dict[int, dict] = {}        # tid -> task (shared with heap)
+        task_by_dev: Dict[int, dict] = {}  # device -> its in-flight task
+        disconnected: set = set()
+        corrupt_pending: Dict[int, list] = {}  # dev -> [(payload, ev_idx)]
+        rs = self._resume
+        if rs is None:
+            hist = {"acc": [], "acc_mean": [], "energy": [], "round_time": [],
+                    "alive": [], "participants": [], "model_choices": [],
+                    "reward": [], "wall_clock": [], "sim_time": [], "idle": [],
+                    "staleness": [], "task_log": [], "lost": [],
+                    "dropouts": 0, "idle_time": 0.0, "wait_for_work": 0.0,
+                    "hotplug": None, "engine": "async",
+                    "faults": {"events": [], "quarantined": [],
+                               "n_reaped": 0, "n_quarantined": 0}}
+            acc_prev = float(np.mean(
+                fl_server.evaluate(global_params, w.x_val, w.y_val,
+                                   family=w.family)))
 
-        state = dict(now=0.0, version=0, seq=0, vround=0,
-                     tasks_started=0, completions=0, inflight=0,
-                     n_cohorts=0, next_commit=0, last_event=0.0,
-                     hotplug_done=not cfg.hotplug_n, acc_prev=acc_prev,
-                     window_t0=0.0, window_wall0=time.time(),
-                     window_reward=0.0, window_idle=0.0)
-        heap: list = []
-        cohorts: Dict[int, dict] = {}   # one per selector.select call
-        last_done: Dict[int, float] = {}
-        window_devices: List[int] = []
-        window_models: List[int] = []
-        # authoritative virtual clocks, host-side float64: the jax-backend
-        # FleetState stores busy_until in float32 (x64 is disabled), whose
-        # ~8ms resolution at ~6.5e4 sim-seconds could mark a mid-task
-        # device idle; fleet.busy_until is kept as an observability mirror
-        # jaxlint: allow(host-sync-in-hot-path) -- one-time setup pull of the host clock mirror
-        busy64 = np.asarray(fleet.busy_until, np.float64).copy()
-        # alive mirror, maintained from values the loop pulls anyway (charge
-        # outcomes, hotplug) so the per-event idle check costs no device sync
-        # jaxlint: allow(host-sync-in-hot-path) -- one-time setup pull of the host alive mirror
-        alive_host = np.asarray(fleet.alive, bool).copy()
+            state = dict(now=0.0, version=0, seq=0, vround=0,
+                         tasks_started=0, completions=0, inflight=0,
+                         n_cohorts=0, next_commit=0, last_event=0.0,
+                         hotplug_done=not cfg.hotplug_n, acc_prev=acc_prev,
+                         window_t0=0.0, window_wall0=time.time(),
+                         window_reward=0.0, window_idle=0.0,
+                         window_lost=0, tid=0)
+            heap: list = []
+            cohorts: Dict[int, dict] = {}   # one per selector.select call
+            last_done: Dict[int, float] = {}
+            window_devices: List[int] = []
+            window_models: List[int] = []
+            # authoritative virtual clocks, host-side float64: the jax-backend
+            # FleetState stores busy_until in float32 (x64 is disabled), whose
+            # ~8ms resolution at ~6.5e4 sim-seconds could mark a mid-task
+            # device idle; fleet.busy_until is kept as an observability mirror
+            # jaxlint: allow(host-sync-in-hot-path) -- one-time setup pull of the host clock mirror
+            busy64 = np.asarray(fleet.busy_until, np.float64).copy()
+            # alive mirror, maintained from values the loop pulls anyway
+            # (charge outcomes, hotplug) so the per-event idle check costs
+            # no device sync
+            # jaxlint: allow(host-sync-in-hot-path) -- one-time setup pull of the host alive mirror
+            alive_host = np.asarray(fleet.alive, bool).copy()
+            if self.faults is not None:
+                # injected churn rides the same heap as completions; seq
+                # pre-assignment makes fault-vs-completion ties deterministic
+                for ev in self.faults.events:
+                    heapq.heappush(
+                        heap, (float(ev.time), state["seq"], "fault",  # jaxlint: allow(host-sync-in-hot-path) -- FaultEvent fields are python scalars; startup plan expansion
+                               {"kind": ev.kind, "device": int(ev.device),  # jaxlint: allow(host-sync-in-hot-path) -- FaultEvent fields are python scalars
+                                "duration": float(ev.duration),  # jaxlint: allow(host-sync-in-hot-path) -- FaultEvent fields are python scalars
+                                "payload": ev.payload}))
+                    state["seq"] += 1
+        else:
+            fleet = self._restore_fleet(fleet, rs["fleet"])
+            global_params = rs["global_params"]
+            hist = rs["hist"]
+            state = dict(rs["state"])
+            state["window_wall0"] = time.time()
+            cohorts = {int(k): dict(v) for k, v in rs["cohorts"].items()}  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            last_done = {int(k): float(v)  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+                         for k, v in rs["last_done"].items()}
+            window_devices = [int(i) for i in rs["window_devices"]]  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            window_models = [int(m) for m in rs["window_models"]]  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            busy64 = rs["busy64"]
+            alive_host = rs["alive_host"]
+            disconnected = set(int(i) for i in rs["disconnected"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            corrupt_pending = {int(k): [tuple(x) for x in v]  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+                               for k, v in rs["corrupt_pending"].items()}
+            for tid, enc in rs["tasks"].items():
+                tasks[int(tid)] = self._decode_task(enc, rs["params_table"])
+            # the serialized heap list was already heap-ordered, so
+            # restoring it verbatim preserves the invariant; done/reap
+            # entries re-share one task object per tid
+            heap = [(float(tt), int(sq), kind,  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+                     tasks[int(ref)] if kind in ("done", "reap")  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+                     else dict(ref))
+                    for tt, sq, kind, ref in rs["heap"]]
+            for task in tasks.values():
+                if not task.get("done") and not task.get("reaped"):
+                    task_by_dev[task["device"]] = task
 
         def n_connected():
             return cfg.n_devices + (cfg.hotplug_n if state["hotplug_done"]
@@ -601,19 +876,31 @@ class RoundEngine:
                 if i in last_done:            # wait-for-work since last task
                     hist["wait_for_work"] += now - last_done[i]
                 task = {
-                    "device": i, "m": int(choice[i]),
+                    "tid": state["tid"], "device": i, "m": int(choice[i]),
                     "version": state["version"],
                     "cohort": cid, "dispatch": cid, "t0": now,
                     "t_cost": float(t_cost[i]),
                 }
+                state["tid"] += 1
                 if self.executor == "batched":
                     task["delta_row"] = rows_by_dev.get(i)
                 else:
                     # per-client path trains lazily at the completion event
                     task["params"] = global_params
+                tasks[task["tid"]] = task
+                task_by_dev[i] = task
                 heapq.heappush(heap, (now + float(t_cost[i]), state["seq"],
-                                      task))
+                                      "done", task))
                 state["seq"] += 1
+                if reaping:
+                    # deadline strictly beyond the completion event: a lost
+                    # task's slot is reclaimed here, a healthy task's reap
+                    # pops as a no-op after its own completion
+                    task["deadline"] = now + deadline_factor * float(
+                        t_cost[i])
+                    heapq.heappush(heap, (task["deadline"], state["seq"],
+                                          "reap", task))
+                    state["seq"] += 1
             cohorts[cid]["pending"] = len(started)
             state["tasks_started"] += len(started)
             state["inflight"] += len(started)
@@ -653,6 +940,7 @@ class RoundEngine:
             hist["wall_clock"].append(time.time() - state["window_wall0"])
             hist["sim_time"].append(now)
             hist["idle"].append(state["window_idle"])
+            hist["lost"].append(state["window_lost"])
             if self.verbose:
                 print(f"  vround {state['vround']:3d}: acc={acc:.3f}"
                       f" alive={alive_now} energy={e_now:,.0f}J"
@@ -663,12 +951,24 @@ class RoundEngine:
             state["window_wall0"] = time.time()
             state["window_reward"] = 0.0
             state["window_idle"] = 0.0
+            state["window_lost"] = 0
             state["vround"] += 1
+
+        def maybe_emit():
+            # lost (reaped) tasks count toward the virtual-round quota so
+            # heavy churn still advances rounds — a window where every task
+            # died emits a zero-participant row instead of stalling
+            if len(window_devices) + state["window_lost"] >= top_k():
+                emit_row()
+                maybe_hotplug()
 
         def process_completion(task):
             nonlocal global_params
             now = state["now"]
             i = task["device"]
+            task["done"] = True
+            if task_by_dev.get(i) is task:
+                del task_by_dev[i]
             state["inflight"] -= 1
             last_done[i] = now
             staleness = state["version"] - task["version"]
@@ -689,6 +989,16 @@ class RoundEngine:
             n_i = len(w.parts[i])
             aggregated = False
             if n_i:
+                poison_val = None
+                if corrupt_pending.get(i):
+                    # an armed "corrupt" fault fires on this device's next
+                    # completed delta; the aggregation-side quarantine must
+                    # keep it out of the global params (asserted by tests)
+                    payload, ev_idx = corrupt_pending[i].pop(0)
+                    poison_val = poison_payload(payload)
+                    ev_rec = hist["faults"]["events"][ev_idx]
+                    ev_rec["outcome"] = "poisoned"
+                    ev_rec["poisoned_version"] = state["version"]
                 batched = "delta_row" in task
                 if batched:
                     # bucketed executor: delta precomputed at the dispatch
@@ -704,32 +1014,50 @@ class RoundEngine:
                                               task["m"],
                                               w.x_tr[w.parts[i]],
                                               w.y_tr[w.parts[i]], seed)
+                qinfo = {"devices": [i], "models": [task["m"]],
+                         "version": state["version"], "time": now}
                 if cfg.method == "drfl":
                     if batched:
                         delta_1 = jax.tree.map(
                             lambda a: a[row:row + 1], bucket.stacked_delta)
-                        global_params = fl_server.aggregate_drfl_stacked(
-                            global_params,
-                            [(task["m"], delta_1, [float(n_i)],
-                              [staleness])],
-                            server_lr=cfg.server_lr, staleness_decay=decay,
-                            family=w.family)
+                        if poison_val is not None:
+                            delta_1 = jax.tree.map(
+                                lambda a: jnp.full_like(a, poison_val),
+                                delta_1)
+                        global_params, valid = (
+                            fl_server.aggregate_drfl_stacked(
+                                global_params,
+                                [(task["m"], delta_1, [float(n_i)],
+                                  [staleness])],
+                                server_lr=cfg.server_lr,
+                                staleness_decay=decay,
+                                family=w.family, with_stats=True))
                     else:
-                        global_params = fl_server.aggregate_drfl(
+                        if poison_val is not None:
+                            delta = jax.tree.map(
+                                lambda a: jnp.full_like(a, poison_val),
+                                delta)
+                        global_params, valid = fl_server.aggregate_drfl(
                             global_params, [delta], [task["m"]],
                             [float(n_i)], server_lr=cfg.server_lr,
                             staleness=[staleness], staleness_decay=decay,
-                            family=w.family)
+                            family=w.family, with_stats=True)
                 else:
                     if batched:
                         delta = jax.tree.map(lambda a: a[row],
                                              bucket.stacked_delta)
+                    if poison_val is not None:
+                        delta = jax.tree.map(
+                            lambda a: jnp.full_like(a, poison_val), delta)
                     a = fl_server.staleness_scale(staleness, decay)
                     if a != 1.0:
                         delta = jax.tree.map(
                             lambda u: (u * a).astype(u.dtype), delta)
-                    global_params = fl_server.aggregate_sliced(
-                        global_params, [delta], [float(n_i)])
+                    global_params, valid = fl_server.aggregate_sliced(
+                        global_params, [delta], [float(n_i)],
+                        with_stats=True)
+                if valid is not None:
+                    self._qpend.append((qinfo, valid))
                 state["version"] += 1
                 aggregated = True
             hist["staleness"].append(staleness)
@@ -750,14 +1078,166 @@ class RoundEngine:
             window_devices.append(i)
             window_models.append(task["m"])
             state["completions"] += 1
-            if len(window_devices) >= top_k():
-                emit_row()
-                maybe_hotplug()
+            maybe_emit()
+
+        def process_reap(task):
+            # a lost task's deadline passed: reclaim its in-flight slot and
+            # settle its cohort so commit_ready can flush in dispatch order.
+            # Healthy tasks completed before their deadline — their reap
+            # pops as a pure no-op.
+            nonlocal fleet
+            if (task.get("done") or task.get("reaped")
+                    or not task.get("lost")):
+                return
+            task["reaped"] = True
+            now = state["now"]
+            i = task["device"]
+            if task_by_dev.get(i) is task:
+                del task_by_dev[i]
+            state["inflight"] -= 1
+            cohorts[task["cohort"]]["pending"] -= 1
+            # the lost task's cohort pays for the virtual time its silence
+            # stalled the timeline (same telescoping rule as completions)
+            credit(task["cohort"], -w3 * ((now - state["last_event"])
+                                          / 60.0))
+            state["last_event"] = now
+            busy64[i] = min(busy64[i], now)
+            fleet = fleet_set_busy(fleet, [i], float(busy64[i]))  # jaxlint: allow(host-sync-in-hot-path) -- busy64 is the float64 host mirror, no device sync
+            hist["faults"]["n_reaped"] += 1
+            state["window_lost"] += 1
+            hist["task_log"].append({
+                "device": i, "dispatch": task["dispatch"],
+                "version": task["version"], "staleness": None,
+                "m": task["m"], "t_dispatch": task["t0"], "t_done": None,
+                "lost": True, "reaped_at": now,
+            })
+            maybe_emit()
+
+        def process_fault(ev):
+            nonlocal fleet
+            now = state["now"]
+            i = int(ev["device"])
+            kind = ev["kind"]
+            entry = {"time": now, "kind": kind, "device": i,
+                     "injected": kind != "rejoin"}
+            task = task_by_dev.get(i)
+            if kind == "rejoin":
+                if i in disconnected:
+                    disconnected.discard(i)
+                    fleet = fleet_set_alive(fleet, [i], True)
+                    alive_host[i] = True
+                    busy64[i] = now
+                    fleet = fleet_set_busy(fleet, [i], now)
+                    entry["outcome"] = "rejoined"
+                else:
+                    # the device crash-died while disconnected — stays dead
+                    entry["outcome"] = "noop"
+            elif kind == "crash":
+                if not alive_host[i]:
+                    entry["outcome"] = "already_dead"
+                else:
+                    # jaxlint: allow(host-sync-in-hot-path) -- one scalar pull per injected crash event (plan-bounded, not per tick)
+                    e_lost = float(jax.device_get(fleet.remaining[i]))
+                    fleet = fleet_kill(fleet, [i])
+                    alive_host[i] = False
+                    entry["e_lost"] = e_lost
+                    if task is not None and not task.get("lost"):
+                        # mid-task: the cohort that picked this device eats
+                        # the wasted battery, so MARL learns flakiness
+                        task["lost"] = True
+                        credit(task["cohort"], -w2 * e_lost)
+                        entry["outcome"] = "crash_mid_task"
+                    else:
+                        entry["outcome"] = "crash_idle"
+            elif kind == "timeout":
+                if task is None or task.get("lost"):
+                    entry["outcome"] = "no_inflight_task"
+                else:
+                    # straggler: silent until the deadline reaps the task;
+                    # the device itself survives with its battery
+                    task["lost"] = True
+                    busy64[i] = task["deadline"]
+                    fleet = fleet_set_busy(fleet, [i], task["deadline"])
+                    entry["outcome"] = "timed_out"
+                    entry["reap_at"] = task["deadline"]
+            elif kind == "disconnect":
+                if not alive_host[i]:
+                    entry["outcome"] = "already_dead"
+                else:
+                    alive_host[i] = False
+                    fleet = fleet_set_alive(fleet, [i], False)
+                    disconnected.add(i)
+                    if task is not None and not task.get("lost"):
+                        task["lost"] = True
+                        entry["outcome"] = "disconnect_mid_task"
+                    else:
+                        entry["outcome"] = "disconnected"
+                    t_back = now + max(float(ev.get("duration", 0.0)), 1e-6)
+                    heapq.heappush(heap, (t_back, state["seq"], "fault",
+                                          {"kind": "rejoin", "device": i}))
+                    state["seq"] += 1
+                    entry["rejoin_at"] = t_back
+            elif kind == "corrupt":
+                entry["payload"] = ev.get("payload") or "nan"
+                entry["outcome"] = "armed"
+            hist["faults"]["events"].append(entry)
+            if kind == "corrupt":
+                corrupt_pending.setdefault(i, []).append(
+                    (entry["payload"], len(hist["faults"]["events"]) - 1))
+
+        def save_checkpoint():
+            # quarantine verdicts flush first so the serialized hist is
+            # self-consistent; heap entries serialize task payloads by tid
+            # (done+reap share one object) and perclient param snapshots
+            # dedup by version
+            self._flush_quarantine(hist)
+            params_table: Dict[int, Any] = {}
+            tasks_enc: Dict[int, Any] = {}
+            heap_enc = []
+            for tt, sq, kind, payload in heap:
+                if kind == "fault":
+                    heap_enc.append((float(tt), int(sq), kind,
+                                     dict(payload)))
+                else:
+                    tid = payload["tid"]
+                    if tid not in tasks_enc:
+                        tasks_enc[tid] = self._encode_task(payload,
+                                                           params_table)
+                    heap_enc.append((float(tt), int(sq), kind, tid))
+            snap = self._base_snapshot(fleet, global_params, hist)
+            snap.update(
+                state=dict(state),
+                cohorts={int(k): dict(v) for k, v in cohorts.items()},
+                last_done=dict(last_done),
+                window_devices=list(window_devices),
+                window_models=list(window_models),
+                busy64=busy64.copy(),
+                alive_host=alive_host.copy(),
+                disconnected=sorted(int(x) for x in disconnected),
+                corrupt_pending={int(k): [tuple(x) for x in v]
+                                 for k, v in corrupt_pending.items()},
+                tasks=tasks_enc,
+                heap=heap_enc,
+                params_table=params_table,
+            )
+            self.ckpt.save(snap, self._ckpt_meta(state["vround"]))
+            self._after_save()
+
+        last_ckpt = {"vround": state["vround"]}
+
+        def maybe_checkpoint():
+            if self.ckpt is None or self.ckpt_every <= 0:
+                return
+            v = state["vround"]
+            if v > last_ckpt["vround"] and v % self.ckpt_every == 0:
+                last_ckpt["vround"] = v
+                save_checkpoint()
 
         # --- timeline -------------------------------------------------
-        maybe_hotplug()      # hotplug_round == 0 joins before first dispatch
-        refill()
-        commit_ready()
+        if rs is None:
+            maybe_hotplug()  # hotplug_round == 0 joins before first dispatch
+            refill()
+            commit_ready()
         while True:
             if not heap:
                 if not state["hotplug_done"] \
@@ -773,13 +1253,26 @@ class RoundEngine:
                     if heap:
                         continue
                 break
-            t_done, _, task = heapq.heappop(heap)
-            state["now"] = t_done
-            process_completion(task)
+            t_ev, _, kind, payload = heapq.heappop(heap)
+            state["now"] = t_ev
+            if kind == "done":
+                # a task marked lost settles at its reap event instead
+                if not payload.get("lost"):
+                    process_completion(payload)
+                if not reaping:
+                    tasks.pop(payload["tid"], None)
+            elif kind == "reap":
+                # the reap event is always a task's LAST heap entry
+                # (deadline > completion time), so release it here
+                process_reap(payload)
+                tasks.pop(payload["tid"], None)
+            else:
+                process_fault(payload)
             refill()
             commit_ready()
+            maybe_checkpoint()
 
-        if window_devices:
+        if window_devices or state["window_lost"]:
             emit_row()
         # flush cohorts whose tasks were cut by the horizon/budget
         for c in cohorts.values():
@@ -796,6 +1289,24 @@ class RoundEngine:
             _marl_train(marl, buffer, hist, fleet, state["vround"],
                         n_updates)
 
+        if state["tasks_started"] >= budget:
+            reason = "budget_exhausted"
+        elif not bool(alive_host.any()):
+            # every device (including all in-flight work) died: nothing can
+            # ever be dispatched again — the terminal marker tells callers
+            # the run ended early rather than silently under-delivering
+            reason = "fleet_dead"
+        elif horizon > 0:
+            reason = "horizon_reached"
+        else:
+            reason = "starved"
+        hist["terminated"] = {
+            "reason": reason, "vrounds": state["vround"],
+            "tasks_started": state["tasks_started"],
+            "completions": state["completions"],
+            "lost": hist["faults"]["n_reaped"],
+            "sim_time": state["now"],
+        }
         hist["n_tasks"] = state["tasks_started"]
         hist["n_aggregations"] = state["version"]
         hist["sim_time_total"] = state["now"]
@@ -803,6 +1314,7 @@ class RoundEngine:
         return self._finalize(hist, global_params)
 
     def _finalize(self, hist, global_params) -> Dict:
+        self._flush_quarantine(hist)
         hist["final_acc"] = hist["acc"][-1] if hist["acc"] else np.zeros(4)
         hist["best_acc"] = (np.max(np.stack(hist["acc"]), axis=0)
                             if hist["acc"] else np.zeros(4))

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation
-from repro.core.aggregation import (layerwise_aggregate, tree_path_align,
-                                    tree_path_items)
+from repro.core.aggregation import (DELTA_MAG_CAP, delta_valid,
+                                    layerwise_aggregate, sanitize_delta,
+                                    tree_path_align, tree_path_items)
 from repro.models.family import resolve_family
 
 
@@ -66,7 +67,9 @@ def staleness_scale(staleness: float, decay: float = 0.5) -> float:
 def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
                    weights: Sequence[float], server_lr: float = 1.0,
                    staleness: Optional[Sequence[float]] = None,
-                   staleness_decay: float = 0.5, family=None):
+                   staleness_decay: float = 0.5, family=None,
+                   validate: bool = True, mag_cap: float = DELTA_MAG_CAP,
+                   with_stats: bool = False):
     """DR-FL layer-aligned aggregation, optionally staleness-aware.
 
     With ``staleness`` given (one entry per delta: aggregations elapsed
@@ -76,9 +79,23 @@ def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
     stages/exits the client's submodel holds and multiplied into the delta,
     so a lone stale contributor moves a layer by alpha * update (absolute
     FedAsync damping), not by the full update renormalized.  ``staleness``
-    of all zeros (or None) reproduces the synchronous path bit-for-bit."""
+    of all zeros (or None) reproduces the synchronous path bit-for-bit.
+
+    ``validate`` quarantines poisoned deltas (non-finite anywhere, or any
+    element beyond ``mag_cap``): the offender's mask is zeroed so the
+    exact-rescale denominator removes it, and its elements are zeroed so
+    nan can't leak through the numerator.  All-valid input is bit-for-bit
+    the unvalidated path (mask * 1.0, element-exact ``where``).
+    ``with_stats`` additionally returns the [N] device-side validity —
+    callers batch the host pull (one device_get at their barrier)."""
     fam = resolve_family(family)
     masks = [fam.update_mask(global_params, m) for m in model_idxs]
+    valid = None
+    if validate:
+        valid = [delta_valid(d, mag_cap) for d in deltas]
+        deltas = [sanitize_delta(d) for d in deltas]
+        masks = [jax.tree.map(lambda mm: mm * v.astype(jnp.float32), mask)
+                 for mask, v in zip(masks, valid)]
     if staleness is not None and any(s > 0 for s in staleness):
         scaled = []
         for d, m, s in zip(deltas, model_idxs, staleness):
@@ -91,8 +108,11 @@ def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
                 lambda u, sm: (u.astype(jnp.float32) * sm).astype(u.dtype),
                 d, smask))
         deltas = scaled
-    return layerwise_aggregate(global_params, deltas, masks, weights,
-                               server_lr=server_lr)
+    out = layerwise_aggregate(global_params, deltas, masks, weights,
+                              server_lr=server_lr)
+    if with_stats:
+        return out, (jnp.stack(valid) if valid is not None else None)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -112,14 +132,24 @@ def aggregate_drfl(global_params, deltas: List, model_idxs: List[int],
 @functools.partial(
     jax.jit,
     static_argnames=("family", "model_idxs", "server_lr", "any_stale",
-                     "use_kernel", "interpret"))
+                     "use_kernel", "interpret", "validate", "mag_cap"))
 def _stacked_agg_program(global_params, deltas, weights, alphas, *,
                          family, model_idxs, server_lr, any_stale,
-                         use_kernel, interpret):
+                         use_kernel, interpret, validate=True,
+                         mag_cap=DELTA_MAG_CAP):
     """The whole of DR-FL Step 2 as ONE jit program: flatten bucket-stacked
-    deltas into [N, R, seg] rows, masked-mean them (Pallas kernel on TPU /
-    fused einsum elsewhere), scatter the averaged rows back onto the global
-    tree.  Compiled once per (family, bucket model indices, padded shapes)."""
+    deltas into [N, R, seg] rows, quarantine poisoned rows, masked-mean
+    (Pallas kernel on TPU / fused einsum elsewhere), scatter the averaged
+    rows back onto the global tree.  Compiled once per (family, bucket
+    model indices, padded shapes).
+
+    Quarantine (``validate``): a client row that is non-finite anywhere or
+    exceeds ``mag_cap`` gets its mask column zeroed — the denominator's
+    exact rescale then removes it from the mean — and its elements zeroed
+    (0 * nan = nan, so masking alone cannot keep nan out of the
+    numerator).  All-valid input is bit-for-bit the unvalidated program.
+    Returns ``(new_params, valid)`` with ``valid`` a [N_total] device bool
+    (None when validation is off)."""
     template = family.stack_template(global_params)
     us, row_masks = [], []
     for model_idx, delta in zip(model_idxs, deltas):
@@ -135,19 +165,27 @@ def _stacked_agg_program(global_params, deltas, weights, alphas, *,
     m_all = jnp.concatenate(row_masks, axis=0)
     w_all = jnp.concatenate(weights)
     a_all = jnp.concatenate(alphas) if any_stale else None
+    valid = None
+    if validate:
+        valid = aggregation.stacked_rows_valid(u_all, mag_cap)  # [N_total]
+        u_all = jnp.where(valid[:, None, None], u_all, 0.0)
+        m_all = m_all * valid[:, None].astype(m_all.dtype)
     rows = aggregation.stacked_masked_mean(
         u_all, m_all, w_all, a_all, interpret=interpret,
         use_kernel=use_kernel)
     new_groups = aggregation.unstack_apply(family.stack_groups(global_params),
                                            rows, template,
                                            server_lr=server_lr)
-    return family.unstack_groups(global_params, new_groups)
+    return family.unstack_groups(global_params, new_groups), valid
 
 
 def aggregate_drfl_stacked(global_params, buckets, server_lr: float = 1.0,
                            staleness_decay: float = 0.5,
                            interpret: Optional[bool] = None,
-                           use_kernel: Optional[bool] = None, family=None):
+                           use_kernel: Optional[bool] = None, family=None,
+                           validate: bool = True,
+                           mag_cap: float = DELTA_MAG_CAP,
+                           with_stats: bool = False):
     """DR-FL layer-aligned aggregation over bucket-stacked deltas.
 
     ``buckets``: iterable of ``(model_idx, stacked_delta, weights,
@@ -158,7 +196,14 @@ def aggregate_drfl_stacked(global_params, buckets, server_lr: float = 1.0,
     counts.  Staleness alphas are folded into the mask matrix numerator
     with the denominator kept at the 0/1 hold mask (absolute FedAsync
     damping, same semantics as :func:`aggregate_drfl`); all-fresh input
-    skips the rescale so it is exactly the plain masked mean."""
+    skips the rescale so it is exactly the plain masked mean.
+
+    ``validate``/``mag_cap``: see :func:`_stacked_agg_program` (quarantine
+    of poisoned rows; padded rows with garbage contents are harmless either
+    way — their weight is already 0 — but quarantine also zeroes them, so
+    a non-finite pad row can no longer poison the numerator).
+    ``with_stats`` returns ``(params, valid)`` with the [N_total] row
+    validity left ON DEVICE — callers batch the pull."""
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     fam = resolve_family(family)
@@ -176,12 +221,14 @@ def aggregate_drfl_stacked(global_params, buckets, server_lr: float = 1.0,
             any_stale = any_stale or any(a != 1.0 for a in scales)
             alphas.append(jnp.asarray(scales, jnp.float32))
     if not deltas:
-        return global_params
-    return _stacked_agg_program(
+        return (global_params, None) if with_stats else global_params
+    out, valid = _stacked_agg_program(
         global_params, tuple(deltas), tuple(ws), tuple(alphas),
         family=fam, model_idxs=tuple(model_idxs),
         server_lr=float(server_lr), any_stale=any_stale,
-        use_kernel=bool(use_kernel), interpret=interpret)
+        use_kernel=bool(use_kernel), interpret=interpret,
+        validate=bool(validate), mag_cap=float(mag_cap))
+    return (out, valid) if with_stats else out
 
 
 def aggregate_drfl_from_list(global_params, deltas: List,
@@ -192,7 +239,9 @@ def aggregate_drfl_from_list(global_params, deltas: List,
                              staleness_decay: float = 0.5,
                              interpret: Optional[bool] = None,
                              use_kernel: Optional[bool] = None,
-                             family=None):
+                             family=None, validate: bool = True,
+                             mag_cap: float = DELTA_MAG_CAP,
+                             with_stats: bool = False):
     """Stacked-kernel aggregation over FULL-STRUCTURE delta pytrees (the
     list-based :func:`aggregate_drfl` contract) — each delta becomes a
     P=1 bucket.  Used for parity testing the kernel path against the
@@ -208,7 +257,9 @@ def aggregate_drfl_from_list(global_params, deltas: List,
                                   server_lr=server_lr,
                                   staleness_decay=staleness_decay,
                                   interpret=interpret,
-                                  use_kernel=use_kernel, family=fam)
+                                  use_kernel=use_kernel, family=fam,
+                                  validate=validate, mag_cap=mag_cap,
+                                  with_stats=with_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -228,20 +279,35 @@ def _scatter_avg(gp, contribs):
     return (gp.astype(jnp.float32) + avg).astype(gp.dtype)
 
 
-def aggregate_sliced(global_params, deltas: List, weights: Sequence[float]):
+def aggregate_sliced(global_params, deltas: List, weights: Sequence[float],
+                     validate: bool = True,
+                     mag_cap: float = DELTA_MAG_CAP,
+                     with_stats: bool = False):
     """Structure- and shape-tolerant scatter aggregation (HeteroFL/ScaleFL).
 
     Contributions are collected per TREE PATH: a client's (possibly
     depth-truncated, width-sliced) delta subtree is aligned against the
     global tree position-by-position, so aliased leaves — the same array
     object reachable at two paths, which an ``id()``-keyed table would
-    silently merge — stay independent aggregation targets."""
+    silently merge — stay independent aggregation targets.
+
+    ``validate`` quarantines poisoned deltas exactly as
+    :func:`aggregate_drfl` does: the client's weight is scaled by its
+    device-side validity (0 drops it from numerator AND denominator, and
+    the shared total cancels, so surviving clients are renormalized
+    exactly) and non-finite elements are zeroed."""
+    valid = None
+    if validate:
+        valid = [delta_valid(d, mag_cap) for d in deltas]
+        deltas = [sanitize_delta(d) for d in deltas]
     table: Dict[tuple, list] = {
         path: [] for path, _ in tree_path_items(global_params)}
-    for d, w in zip(deltas, weights):
+    for j, (d, w) in enumerate(zip(deltas, weights)):
+        wj = float(w) if valid is None else float(w) * valid[j].astype(
+            jnp.float32)
         for path, leaf in tree_path_align(global_params, d):
             if leaf is not None:
-                table[path].append((leaf, float(w)))
+                table[path].append((leaf, wj))
     wtot = float(sum(weights)) or 1.0
 
     def rebuild(gp, path=()):
@@ -256,4 +322,7 @@ def aggregate_sliced(global_params, deltas: List, weights: Sequence[float]):
         contribs = [(u, w / wtot) for u, w in contribs]
         return _scatter_avg(gp, contribs)
 
-    return rebuild(global_params)
+    out = rebuild(global_params)
+    if with_stats:
+        return out, (jnp.stack(valid) if valid is not None else None)
+    return out

@@ -99,6 +99,21 @@ class FLConfig:
     # many local devices (0/1 = off, -1 = all local devices); selection +
     # energy kernels then run data-parallel (repro.sharding.fleet)
     fleet_mesh: int = 0
+    # --- crash safety: checkpoint/resume + fault injection -----------------
+    # (repro.checkpoint.engine + repro.fl.faults; docs/RESILIENCE.md)
+    checkpoint_dir: str = ""            # empty = checkpointing off
+    checkpoint_every: int = 0           # save every N (virtual) rounds
+    checkpoint_keep: int = 3            # manifests kept (older ones rotate)
+    resume: bool = False                # resume from latest manifest in dir
+    fault_crashes: int = 0              # seeded churn counts (async only)
+    fault_timeouts: int = 0
+    fault_disconnects: int = 0
+    fault_corrupts: int = 0
+    fault_horizon: float = 0.0          # event window (0 = async horizon)
+    fault_seed: int = -1                # -1 = reuse cfg.seed
+    # in-flight tasks are declared lost (and their slot reclaimed) at
+    # dispatch + factor * t_cost; only active when faults are injected
+    task_deadline_factor: float = 4.0
 
 
 def _make_selector(cfg: FLConfig, n_models: int) -> SelectorBase:
@@ -164,7 +179,8 @@ def _make_buffer(cfg: FLConfig):
                         state_dim, cfg.seed, agent_budget=agent_budget)
 
 
-def run_simulation(cfg, verbose: bool = False) -> Dict:
+def run_simulation(cfg, verbose: bool = False,
+                   halt_after_saves: int = 0) -> Dict:
     """Runs the FL simulation.  ``cfg`` is an :class:`FLConfig` (the stable
     flat compatibility surface) or a typed :class:`repro.fl.spec.
     SimulationSpec`; both are validated up front, so a typo like
@@ -173,25 +189,66 @@ def run_simulation(cfg, verbose: bool = False) -> Dict:
     earlier episodes pre-train the QMIX policy (fresh fleet + global model
     each episode, persistent learner + replay buffer) and the LAST episode
     is reported — the CPU-scale analogue of the paper's long online
-    runs."""
+    runs.
+
+    Crash safety: with ``cfg.checkpoint_dir`` + ``cfg.checkpoint_every``
+    set, the engine snapshots its FULL run state on that cadence; with
+    ``cfg.resume=True`` the latest manifest in the directory is loaded
+    (after a config-fingerprint check) and the run continues — histories
+    and final params are byte-identical to an uninterrupted run.
+    ``halt_after_saves=N`` (> 0, test/bench hook) simulates a crash by
+    raising :class:`repro.checkpoint.engine.CheckpointHalt` right after
+    the N-th checkpoint save of this call."""
     from repro.fl.spec import ensure_flat_config
     cfg = ensure_flat_config(cfg)
+    resume_state = resume_meta = None
+    if cfg.resume:
+        from repro.checkpoint.engine import (EngineCheckpointer,
+                                             config_fingerprint)
+        if not cfg.checkpoint_dir:
+            raise ValueError("resume=True needs checkpoint_dir")
+        ck = EngineCheckpointer(cfg.checkpoint_dir,
+                                keep=cfg.checkpoint_keep)
+        latest = ck.latest()
+        if latest is not None:
+            resume_state, resume_meta = ck.load(latest)
+            fp = config_fingerprint(cfg)
+            got = resume_meta.get("fingerprint")
+            if got != fp:
+                raise ValueError(
+                    f"checkpoint fingerprint {got!r} does not match this "
+                    f"config ({fp!r}); refusing to resume a different run")
+    halt = ({"remaining": int(halt_after_saves)} if halt_after_saves > 0
+            else None)
+    start_ep = int(resume_meta["episode"]) if resume_meta else 0
     selector = None
     buffer = None
     episodes = cfg.marl_episodes if (cfg.method == "drfl"
                                      and cfg.selector == "marl") else 1
     for ep in range(episodes):
+        if ep < start_ep:
+            # fully covered by the checkpoint: the restored selector +
+            # buffer state already contain these episodes' training
+            continue
         if selector is None:
             selector = _make_selector(
                 cfg, get_family(cfg.model_family).num_submodels())
         marl = selector if isinstance(selector, MarlSelector) else None
+        resuming = resume_state is not None and ep == start_ep
         if marl:
             if buffer is None:
                 buffer = _make_buffer(cfg)
-            marl.reset_episode()
+            if not resuming:
+                # the resumed episode's trace/hidden/RNG state comes from
+                # the checkpoint — resetting would fork the episode
+                marl.reset_episode()
         engine = RoundEngine(cfg, selector, buffer,
-                             verbose=verbose and ep == episodes - 1)
+                             verbose=verbose and ep == episodes - 1,
+                             episode=ep,
+                             resume_state=resume_state if resuming else None,
+                             halt_counter=halt)
         hist = engine.run()
+        resume_state = None              # consumed by its episode
     return hist
 
 

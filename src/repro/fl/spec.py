@@ -159,6 +159,44 @@ class EnergySpec:
 
 
 @dataclasses.dataclass
+class ResilienceSpec:
+    """Crash safety: engine checkpoint/resume cadence + seeded fault
+    injection (repro.checkpoint.engine, repro.fl.faults;
+    docs/RESILIENCE.md)."""
+    checkpoint_dir: str = ""            # empty = checkpointing off
+    checkpoint_every: int = 0           # save every N (virtual) rounds
+    checkpoint_keep: int = 3            # manifests kept before rotation
+    resume: bool = False                # resume from latest manifest
+    fault_crashes: int = 0              # seeded churn counts (async only)
+    fault_timeouts: int = 0
+    fault_disconnects: int = 0
+    fault_corrupts: int = 0
+    fault_horizon: float = 0.0          # event window (0 = async horizon)
+    fault_seed: int = -1                # -1 = reuse the run seed
+    task_deadline_factor: float = 4.0   # lost-task reap at factor * t_cost
+
+    def n_faults(self) -> int:
+        return (self.fault_crashes + self.fault_timeouts
+                + self.fault_disconnects + self.fault_corrupts)
+
+    def __post_init__(self):
+        _check(self.checkpoint_every >= 0,
+               "resilience.checkpoint_every must be >= 0")
+        _check(self.checkpoint_keep >= 1,
+               "resilience.checkpoint_keep must be >= 1")
+        for f in ("fault_crashes", "fault_timeouts", "fault_disconnects",
+                  "fault_corrupts"):
+            _check(getattr(self, f) >= 0, f"resilience.{f} must be >= 0")
+        _check(self.fault_horizon >= 0,
+               "resilience.fault_horizon must be >= 0")
+        _check(self.task_deadline_factor > 1,
+               "resilience.task_deadline_factor must be > 1 (a deadline at "
+               "or before the task's own completion would reap live work)")
+        _check(not self.resume or self.checkpoint_dir,
+               "resilience.resume needs checkpoint_dir")
+
+
+@dataclasses.dataclass
 class SimulationSpec:
     """One cell of the paper's experiment grid, fully typed + validated."""
     n_devices: int = 40
@@ -177,6 +215,8 @@ class SimulationSpec:
     engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
     marl: MarlSpec = dataclasses.field(default_factory=MarlSpec)
     energy: EnergySpec = dataclasses.field(default_factory=EnergySpec)
+    resilience: ResilienceSpec = dataclasses.field(
+        default_factory=ResilienceSpec)
 
     def __post_init__(self):
         _check(self.n_devices >= 1, "n_devices must be >= 1")
@@ -195,6 +235,14 @@ class SimulationSpec:
                f"model family {family.name!r} does not support "
                f"method {self.method!r} (supported: "
                f"{', '.join(family.supported_methods)})")
+        if self.resilience.n_faults():
+            _check(self.engine.mode == "async",
+                   "fault injection rides the async event timeline: "
+                   "fault_* counts need engine.mode='async'")
+            _check(self.resilience.fault_horizon > 0
+                   or self.engine.async_time_horizon > 0,
+                   "fault injection needs a time window: set "
+                   "resilience.fault_horizon or engine.async_time_horizon")
 
     # -- bridges ----------------------------------------------------------
     @classmethod
@@ -229,7 +277,19 @@ class SimulationSpec:
                 agent_budget=cfg.marl_agent_budget),
             energy=EnergySpec(
                 scale=cfg.energy_scale, hotplug_round=cfg.hotplug_round,
-                hotplug_n=cfg.hotplug_n))
+                hotplug_n=cfg.hotplug_n),
+            resilience=ResilienceSpec(
+                checkpoint_dir=cfg.checkpoint_dir,
+                checkpoint_every=cfg.checkpoint_every,
+                checkpoint_keep=cfg.checkpoint_keep,
+                resume=cfg.resume,
+                fault_crashes=cfg.fault_crashes,
+                fault_timeouts=cfg.fault_timeouts,
+                fault_disconnects=cfg.fault_disconnects,
+                fault_corrupts=cfg.fault_corrupts,
+                fault_horizon=cfg.fault_horizon,
+                fault_seed=cfg.fault_seed,
+                task_deadline_factor=cfg.task_deadline_factor))
 
     def to_flat(self) -> FLConfig:
         """Lower to the flat compatibility surface consumed by the engine."""
@@ -260,7 +320,18 @@ class SimulationSpec:
             state_mode=self.marl.state_mode,
             mixer_mode=self.marl.mixer_mode,
             marl_agent_budget=self.marl.agent_budget,
-            fleet_mesh=self.engine.fleet_mesh)
+            fleet_mesh=self.engine.fleet_mesh,
+            checkpoint_dir=self.resilience.checkpoint_dir,
+            checkpoint_every=self.resilience.checkpoint_every,
+            checkpoint_keep=self.resilience.checkpoint_keep,
+            resume=self.resilience.resume,
+            fault_crashes=self.resilience.fault_crashes,
+            fault_timeouts=self.resilience.fault_timeouts,
+            fault_disconnects=self.resilience.fault_disconnects,
+            fault_corrupts=self.resilience.fault_corrupts,
+            fault_horizon=self.resilience.fault_horizon,
+            fault_seed=self.resilience.fault_seed,
+            task_deadline_factor=self.resilience.task_deadline_factor)
 
 
 def ensure_flat_config(cfg) -> FLConfig:

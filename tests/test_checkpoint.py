@@ -1,0 +1,235 @@
+"""Checkpoint substrate hardening (crash-safe fleet service).
+
+Covers the io layer — dtype validation, duplicate-leaf-path raise,
+corrupt/truncated-file errors, codec cross-loading, ``latest_step`` tmp
+hygiene — and the engine-manifest layer: exact skeleton round-trips
+(incl. float64 numpy leaves with x64 disabled), keep-last-k rotation,
+orphaned arrays files, manifest version gating, RNG snapshots, and the
+config fingerprint that blocks resuming a different run.
+"""
+import json
+import os
+import tempfile
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.checkpoint import (EngineCheckpointer, config_fingerprint,
+                              decode_state, encode_state, latest_step,
+                              load_pytree, read_payload, rng_state,
+                              save_pytree, set_rng_state)
+from repro.checkpoint import io as ckpt_io
+
+try:
+    import zstandard  # noqa: F401
+    HAVE_ZSTD = True
+except ImportError:
+    HAVE_ZSTD = False
+
+DTYPES = ("bool", "int32", "int64", "float32", "float64")
+
+
+def _random_array(dt, seed):
+    rng = np.random.default_rng(seed)
+    if dt == "bool":
+        return rng.integers(0, 2, size=(3, 4)).astype(bool)
+    if dt.startswith("int"):
+        return rng.integers(-1000, 1000, size=(3, 4)).astype(dt)
+    return rng.standard_normal((3, 4)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# io layer
+# ----------------------------------------------------------------------
+
+@given(dt=st.sampled_from(DTYPES), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_save_load_round_trips_every_dtype(dt, seed):
+    arr = _random_array(dt, seed)
+    with tempfile.TemporaryDirectory() as d:
+        p = save_pytree(os.path.join(d, "x.ckpt"), {"a": arr})
+        out = load_pytree(p, {"a": np.zeros_like(arr)}, backend="numpy")
+    got = out["a"]
+    assert isinstance(got, np.ndarray) and got.dtype == arr.dtype
+    assert got.tobytes() == arr.tobytes()
+    got[:] = 0                      # numpy backend must return writable arrays
+
+
+def test_dtype_mismatch_raises(tmp_path):
+    p = save_pytree(str(tmp_path / "x.ckpt"),
+                    {"a": np.ones((2, 2), np.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        load_pytree(p, {"a": np.ones((2, 2), np.int32)})
+
+
+def test_duplicate_leaf_path_raises(tmp_path):
+    # {"a": {"b": ...}} and a literal "a/b" key flatten to the same path —
+    # silently keeping one of the two would corrupt whichever loads second
+    tree = {"a": {"b": np.ones(2)}, "a/b": np.zeros(2)}
+    with pytest.raises(ValueError, match="duplicate leaf path"):
+        save_pytree(str(tmp_path / "x.ckpt"), tree)
+
+
+def test_truncated_and_garbage_files_raise_valueerror(tmp_path):
+    p = save_pytree(str(tmp_path / "x.ckpt"), {"a": np.arange(100.0)})
+    blob = open(p, "rb").read()
+    trunc = tmp_path / "trunc.ckpt"
+    trunc.write_bytes(blob[:len(blob) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        read_payload(str(trunc))
+    garbage = tmp_path / "garbage.ckpt"
+    garbage.write_bytes(b"\x00\x01definitely not a checkpoint")
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        read_payload(str(garbage))
+
+
+def test_payload_without_meta_raises(tmp_path):
+    import msgpack
+    import zlib
+    bad = tmp_path / "bad.ckpt"
+    bad.write_bytes(zlib.compress(msgpack.packb({"a": 1})))
+    with pytest.raises(ValueError, match="missing __meta__"):
+        read_payload(str(bad))
+
+
+def test_latest_step_ignores_tmp_and_foreign_files(tmp_path):
+    d = tmp_path / "ck"
+    p = save_pytree(str(d), {"a": np.ones(2)}, step=3)
+    # a crash mid-save leaves a .tmp; a foreign file must not match either
+    (d / "step_00000009.ckpt.tmp").write_bytes(b"partial")
+    (d / "notes.txt").write_text("hi")
+    assert latest_step(str(d)) == p
+
+
+def test_cross_codec_zlib_always_loads(tmp_path, monkeypatch):
+    # force the zlib fallback on write; the sniffing reader must load it
+    # regardless of which codec the current process would pick
+    arr = np.arange(6.0).reshape(2, 3)
+    monkeypatch.setattr(ckpt_io, "zstd", None)
+    p = save_pytree(str(tmp_path / "z.ckpt"), {"a": arr})
+    monkeypatch.undo()
+    out = load_pytree(p, {"a": np.zeros_like(arr)}, backend="numpy")
+    assert out["a"].tobytes() == arr.tobytes()
+
+
+@pytest.mark.skipif(HAVE_ZSTD, reason="needs the zstd-less fallback path")
+def test_zstd_frame_without_library_raises_runtimeerror(tmp_path):
+    p = tmp_path / "z.ckpt"
+    p.write_bytes(ckpt_io._ZSTD_MAGIC + b"\x00" * 16)
+    with pytest.raises(RuntimeError, match="zstandard"):
+        read_payload(str(p))
+
+
+@pytest.mark.skipif(not HAVE_ZSTD, reason="zstandard not installed")
+def test_cross_codec_zstd_roundtrip(tmp_path):
+    arr = np.arange(6.0)
+    p = save_pytree(str(tmp_path / "z.ckpt"), {"a": arr})
+    assert open(p, "rb").read()[:4] == ckpt_io._ZSTD_MAGIC
+    out = load_pytree(p, {"a": np.zeros_like(arr)}, backend="numpy")
+    assert out["a"].tobytes() == arr.tobytes()
+
+
+# ----------------------------------------------------------------------
+# engine manifest codec
+# ----------------------------------------------------------------------
+
+def _gnarly_state():
+    return {
+        "none": None,
+        "flags": (True, False),
+        "big_int": 2 ** 80 + 3,
+        "exact_float": 0.1 + 0.2,
+        "label": "ep0",
+        "int_keys": {0: "a", 7: {"nested": [1, 2.5, None]}},
+        "np_scalar": np.float64(1.0 / 3.0),
+        "np_f64": np.linspace(0, 1, 7),            # float64 survives x64=off
+        "np_bool": np.array([True, False, True]),
+        "jax_arr": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "heap": [(0.5, 1, "done", 0), (0.75, 2, "fault", {"kind": "crash"})],
+    }
+
+
+def test_skeleton_roundtrip_is_exact():
+    state = _gnarly_state()
+    skeleton, arrays = encode_state(state)
+    # the skeleton must be JSON-able (that's what the manifest stores)
+    skeleton = json.loads(json.dumps(skeleton))
+    out = decode_state(skeleton, arrays)
+    assert out["none"] is None
+    assert out["flags"] == (True, False) and isinstance(out["flags"], tuple)
+    assert out["big_int"] == 2 ** 80 + 3
+    assert out["exact_float"] == 0.1 + 0.2          # exact, not approximate
+    assert out["int_keys"][7]["nested"] == [1, 2.5, None]
+    assert isinstance(out["np_scalar"], np.float64)
+    assert out["np_scalar"] == np.float64(1.0 / 3.0)
+    assert isinstance(out["np_f64"], np.ndarray)
+    assert out["np_f64"].dtype == np.float64
+    assert out["np_f64"].tobytes() == state["np_f64"].tobytes()
+    assert out["np_bool"].dtype == bool
+    assert isinstance(out["jax_arr"], jax.Array)
+    assert np.asarray(out["jax_arr"]).tobytes() == \
+        np.asarray(state["jax_arr"]).tobytes()
+    assert out["heap"][0] == (0.5, 1, "done", 0)
+    assert out["heap"][1][3] == {"kind": "crash"}
+
+
+def test_engine_checkpointer_save_load_rotate(tmp_path):
+    ck = EngineCheckpointer(str(tmp_path), keep=2)
+    for step in (2, 4, 6):
+        ck.save({"step": step, "arr": np.full(3, float(step))},
+                {"episode": 0, "step": step})
+    names = sorted(os.listdir(tmp_path))
+    assert [n for n in names if n.endswith(".manifest.json")] == [
+        "ep0000_step00000004.manifest.json",
+        "ep0000_step00000006.manifest.json"]
+    assert [n for n in names if n.endswith(".ckpt")] == [
+        "ep0000_step00000004.ckpt", "ep0000_step00000006.ckpt"]
+    state, meta = ck.load()                      # latest
+    assert meta["step"] == 6 and state["step"] == 6
+    assert state["arr"].tolist() == [6.0, 6.0, 6.0]
+
+
+def test_orphaned_arrays_file_is_invisible(tmp_path):
+    # crash between the .ckpt write and the manifest write leaves an
+    # orphan; latest() must keep pointing at the previous complete save
+    ck = EngineCheckpointer(str(tmp_path), keep=3)
+    good = ck.save({"x": 1}, {"episode": 0, "step": 1})
+    (tmp_path / "ep0000_step00000002.ckpt").write_bytes(b"partial")
+    assert ck.latest() == good
+    state, meta = ck.load()
+    assert meta["step"] == 1
+
+
+def test_manifest_version_gate(tmp_path):
+    ck = EngineCheckpointer(str(tmp_path))
+    path = ck.save({"x": 1}, {"episode": 0, "step": 1})
+    manifest = json.load(open(path))
+    manifest["version"] = 999
+    json.dump(manifest, open(path, "w"))
+    with pytest.raises(ValueError, match="version 999"):
+        ck.load(path)
+
+
+def test_rng_state_roundtrip():
+    gen = np.random.default_rng(42)
+    gen.standard_normal(5)
+    snap = rng_state(gen)
+    want = gen.standard_normal(8)
+    fresh = np.random.default_rng(0)
+    set_rng_state(fresh, snap)
+    assert np.array_equal(fresh.standard_normal(8), want)
+    assert rng_state(None) is None
+
+
+def test_config_fingerprint_ignores_process_knobs(tmp_path):
+    from repro.fl import FLConfig
+    a = FLConfig(seed=3)
+    b = FLConfig(seed=3, checkpoint_dir=str(tmp_path), checkpoint_every=5,
+                 checkpoint_keep=7, resume=True)
+    c = FLConfig(seed=4)
+    assert config_fingerprint(a) == config_fingerprint(b)
+    assert config_fingerprint(a) != config_fingerprint(c)
