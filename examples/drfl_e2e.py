@@ -8,11 +8,13 @@ hundred rounds at full scale.
     PYTHONPATH=src python examples/drfl_e2e.py --full          # paper-scale
     PYTHONPATH=src python examples/drfl_e2e.py --alpha 0.1 --rounds 50
 
-Writes per-arm histories to drfl_e2e_results.json and a checkpoint of the
-final DR-FL global model.
+Writes per-arm histories (drfl_e2e_results.json) and a checkpoint of the
+final DR-FL global model into the ``--out`` directory (default ``tmp/``,
+created on demand) so runs never litter the working tree.
 """
 import argparse
 import json
+import os
 import sys
 
 sys.path.insert(0, "src")
@@ -31,8 +33,10 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="drfl_e2e_results.json")
+    ap.add_argument("--out", default="tmp",
+                    help="output directory for results + model checkpoint")
     args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
 
     if args.full:
         base = dict(n_devices=40, n_rounds=200, n_train=8000, local_epochs=5,
@@ -61,12 +65,14 @@ def main(argv=None):
             "dropouts": h["dropouts"],
         }
         if method == "drfl":
-            save_pytree("drfl_global_model.ckpt", h["params"])
-            print("saved DR-FL global model -> drfl_global_model.ckpt")
+            ckpt = os.path.join(args.out, "drfl_global_model.ckpt")
+            save_pytree(ckpt, h["params"])
+            print(f"saved DR-FL global model -> {ckpt}")
 
-    with open(args.out, "w") as f:
+    out_json = os.path.join(args.out, "drfl_e2e_results.json")
+    with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
-    print(f"\nwrote {args.out}")
+    print(f"\nwrote {out_json}")
     print("\nfinal best-exit accuracies:")
     for m, r in results.items():
         print(f"  {m:10s} best_acc={np.round(r['best_acc'], 3)} "

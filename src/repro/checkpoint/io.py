@@ -31,7 +31,7 @@ _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 FLEET_CHECKPOINT_FIELDS = ("compute", "p_train", "p_com", "bandwidth",
                            "battery", "remaining", "data_size",
                            "mode_compute", "mode_power", "alive",
-                           "busy_until")
+                           "busy_until", "charge_rate", "tz_phase")
 
 
 def _compress(raw: bytes) -> bytes:

@@ -75,7 +75,7 @@ Array = Any  # np.ndarray | jax.Array — kernels are backend-generic
 # Array fields, in constructor order (tiers/modes are static aux data).
 _ARRAY_FIELDS = ("compute", "p_train", "p_com", "bandwidth", "battery",
                  "remaining", "data_size", "mode_compute", "mode_power",
-                 "alive", "busy_until")
+                 "alive", "busy_until", "charge_rate", "tz_phase")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -102,6 +102,11 @@ class FleetState:
     busy_until: Array = None  # per-device virtual clock (sim seconds): the
                               # device is mid-task until this time; <= now
                               # means idle/dispatchable (async round engine)
+    charge_rate: Array = None  # harvesting amplitude, J/s (repro.energy
+                               # charge profiles; 0 = never recharges)
+    tz_phase: Array = None     # time-of-day offset in [0, 1) fractions of a
+                               # day — local solar time AND timezone, shared
+                               # by solar charge + diurnal availability
     tiers: Tuple[str, ...] = ()
     modes: Tuple[str, ...] = ()
 
@@ -109,10 +114,12 @@ class FleetState:
         # `remaining is None` happens when jax unflattens internal proxy
         # trees (device_put/tree_map with placeholder leaves) — leave the
         # placeholder structure alone in that case
-        if self.busy_until is None and self.remaining is not None:
+        if self.remaining is not None:
             xp = jnp if isinstance(self.remaining, jax.Array) else np
-            self.busy_until = xp.zeros(np.shape(self.remaining),
-                                       self.remaining.dtype)
+            for f in ("busy_until", "charge_rate", "tz_phase"):
+                if getattr(self, f) is None:
+                    setattr(self, f, xp.zeros(np.shape(self.remaining),
+                                              self.remaining.dtype))
 
     # --- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
@@ -278,16 +285,25 @@ def fleet_cost_matrix(fleet: FleetState, model_sizes, model_fractions,
 
 
 def fleet_affordability(fleet: FleetState, model_sizes, model_fractions,
-                        local_epochs: int = 5, batch_size: int = 32):
+                        local_epochs: int = 5, batch_size: int = 32,
+                        budget_left=None):
     """[n, M+1] bool action mask: column m < M is "device can pay for
     submodel m this round" (strict <, matching ``charge``'s survival
     condition), column M ("do not participate") is always legal.  Dead
-    devices can only abstain."""
+    devices can only abstain.
+
+    ``budget_left`` (scalar J, optional) is the remaining FLEET-WIDE
+    energy budget (repro.energy global-budget scenarios): submodels whose
+    cost alone exceeds it are masked out too, so no selector can even
+    propose an action the budget cannot cover.  ``None`` (the default)
+    traces the exact pre-budget program."""
     xp = _xp(fleet)
     _, _, e_tra, e_com = fleet_cost_matrix(
         fleet, model_sizes, model_fractions, local_epochs, batch_size)
-    afford = ((e_tra + e_com) < fleet.remaining[:, None]) \
-        & fleet.alive[:, None]
+    e_need = e_tra + e_com
+    afford = (e_need < fleet.remaining[:, None]) & fleet.alive[:, None]
+    if budget_left is not None:
+        afford = afford & (e_need <= _aslike(fleet, budget_left))
     abstain = xp.ones((len(fleet), 1), bool)
     return xp.concatenate([afford, abstain], axis=1)
 
@@ -514,9 +530,13 @@ def fleet_summary(fleet: FleetState, model_sizes, model_fractions,
 # the ``pytree-field-coverage`` jaxlint rule.  p_train/p_com/bandwidth
 # enter the summary only through the fleet_affordability cost kernel;
 # mode_power prices energy rather than capability; busy_until is the async
-# engine's observability mirror (its authoritative clocks live host-side).
+# engine's observability mirror (its authoritative clocks live host-side);
+# charge_rate/tz_phase are static scenario parameters (repro.energy) whose
+# EFFECT the summary already sees through the battery histogram — reading
+# them here would also change the summary width/values and break the
+# bit-for-bit default-path contract.
 SUMMARY_EXCLUDED_FIELDS = ("p_train", "p_com", "bandwidth", "mode_power",
-                           "busy_until")
+                           "busy_until", "charge_rate", "tz_phase")
 
 
 # Jitted entry points for the jax backend.  local_epochs/batch_size trace as

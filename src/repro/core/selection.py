@@ -90,7 +90,14 @@ class SelectorBase:
     def select(self, devices, round_idx: int, k: int,
                model_sizes: Sequence[float],
                model_fractions: Sequence[float],
-               local_epochs: int = 5, batch_size: int = 32) -> Selection:
+               local_epochs: int = 5, batch_size: int = 32,
+               budget_left: Optional[float] = None) -> Selection:
+        """``budget_left`` (scalar J) is the remaining fleet-wide energy
+        budget under a repro.energy global-budget scenario — EVERY
+        selector must refuse per-device actions whose cost alone exceeds
+        it (the engine additionally trims cohorts whose cumulative cost
+        would overrun).  ``None`` = no budget, the default decision path
+        bit-for-bit."""
         raise NotImplementedError
 
     def observe_reward(self, reward: float,
@@ -295,7 +302,7 @@ class MarlSelector(SelectorBase):
         return obs.reshape(-1)
 
     def select(self, devices, round_idx, k, model_sizes, model_fractions,
-               local_epochs=5, batch_size=32):
+               local_epochs=5, batch_size=32, budget_left=None):
         fleet = as_fleet_state(devices)
         obs = fleet_obs(fleet, round_idx, self.n_rounds)
         self._last_pricing = (tuple(model_sizes), tuple(model_fractions),
@@ -305,11 +312,16 @@ class MarlSelector(SelectorBase):
         self.total_rounds += 1
         # affordability action mask ("prevent selected devices from dropping
         # out of the FL process due to energy limitations", paper §4.2 Step
-        # 3), priced at the round the simulation will actually charge
+        # 3), priced at the round the simulation will actually charge; a
+        # live global budget additionally masks actions it cannot cover
         aff = (fleet_affordability_jit if fleet_is_jax(fleet)
                else fleet_affordability)
-        avail = aff(
-            fleet, model_sizes, model_fractions, local_epochs, batch_size)
+        if budget_left is None:
+            avail = aff(fleet, model_sizes, model_fractions, local_epochs,
+                        batch_size)
+        else:
+            avail = aff(fleet, model_sizes, model_fractions, local_epochs,
+                        batch_size, budget_left=float(budget_left))
         # factored mode reuses the mask — the dominant O(n*M) cost kernel
         # runs once per select, not once for the mask and once in the summary
         state = self._state(fleet, obs, round_idx, model_sizes,
@@ -420,7 +432,7 @@ class GreedySelector(SelectorBase):
     name = "greedy"
 
     def select(self, devices, round_idx, k, model_sizes, model_fractions,
-               local_epochs=5, batch_size=32):
+               local_epochs=5, batch_size=32, budget_left=None):
         fleet = as_fleet_state(devices)
         M = len(model_sizes)
         costs = (fleet_cost_matrix_jit if fleet_is_jax(fleet)
@@ -431,6 +443,10 @@ class GreedySelector(SelectorBase):
         e_need, remaining, alive = jax.device_get(
             (e_tra + e_com, fleet.remaining, fleet.alive))
         afford = (e_need < remaining[:, None]) & alive[:, None]   # [n, M]
+        if budget_left is not None:
+            # global-budget hard constraint: never pick a submodel the
+            # remaining fleet-wide budget cannot pay for
+            afford &= e_need <= float(budget_left)
         # largest affordable submodel per device (-1 if none)
         best = np.where(afford.any(axis=1),
                         M - 1 - np.argmax(afford[:, ::-1], axis=1), -1)
@@ -443,6 +459,27 @@ class GreedySelector(SelectorBase):
         return Selection(participants=chosen, model_choice=model_choice)
 
 
+def _budget_filter(fleet, chosen, model_choice, model_sizes, model_fractions,
+                   local_epochs, batch_size, budget_left):
+    """Drop already-chosen (device, model) picks whose cost alone exceeds
+    the remaining fleet-wide budget (repro.energy global-budget hard
+    constraint) — the post-hoc arm for selectors that pick models without
+    pricing them (random/static).  RNG draw order is untouched, so runs
+    without a budget are bit-for-bit unaffected."""
+    costs = (fleet_cost_matrix_jit if fleet_is_jax(fleet)
+             else fleet_cost_matrix)
+    _, _, e_tra, e_com = costs(
+        fleet, model_sizes, model_fractions, local_epochs, batch_size)
+    # jaxlint: allow(host-sync-in-hot-path) -- budget-scenario-only pull: per-pick costs for the hard-constraint filter
+    e_need = np.asarray(jax.device_get(e_tra + e_com))
+    kept = [i for i in chosen
+            if e_need[i, model_choice[i]] <= float(budget_left)]
+    out_choice = [-1] * len(model_choice)
+    for i in kept:
+        out_choice[i] = model_choice[i]
+    return kept, out_choice
+
+
 class RandomSelector(SelectorBase):
     """Vanilla-FL-style: uniform random K clients, random affordable model."""
 
@@ -452,7 +489,7 @@ class RandomSelector(SelectorBase):
         self.rng = np.random.default_rng(seed)
 
     def select(self, devices, round_idx, k, model_sizes, model_fractions,
-               local_epochs=5, batch_size=32):
+               local_epochs=5, batch_size=32, budget_left=None):
         fleet = as_fleet_state(devices)
         # jaxlint: allow(host-sync-in-hot-path) -- numpy baseline selector: one liveness pull per round
         alive = [int(i) for i in np.flatnonzero(np.asarray(fleet.alive))]
@@ -461,6 +498,10 @@ class RandomSelector(SelectorBase):
         model_choice = [-1] * len(fleet)
         for i in chosen:
             model_choice[i] = int(self.rng.integers(0, len(model_sizes)))
+        if budget_left is not None:
+            chosen, model_choice = _budget_filter(
+                fleet, chosen, model_choice, model_sizes, model_fractions,
+                local_epochs, batch_size, budget_left)
         return Selection(participants=chosen, model_choice=model_choice)
 
 
@@ -485,7 +526,11 @@ def fleet_obs_batch(fleet: FleetState, round_idx, n_rounds: int):
 def dual_selection_energy_step(agent_params, hidden, fleet: FleetState,
                                model_sizes, model_fractions, k: int,
                                round_idx=0, n_rounds: int = 1,
-                               local_epochs: int = 5, batch_size: int = 32):
+                               local_epochs: int = 5, batch_size: int = 32,
+                               budget_left=None, charge_profile=None,
+                               sim_time=0.0, charge_dt: float = 0.0,
+                               energy_scale: float = 1.0,
+                               avail_mask=None):
     """One greedy (evaluation-mode) MARL dual-selection + energy step as a
     SINGLE jittable program — the data-parallel hot path for sharded
     fleets (``benchmarks/fleet_shard_bench.py``).
@@ -498,6 +543,15 @@ def dual_selection_energy_step(agent_params, hidden, fleet: FleetState,
     data-parallel with one ``summary_width``-sized all-reduce at the end —
     no full-fleet gather, no host sync.
 
+    The repro.energy scenario hooks keep that shape: ``budget_left``
+    (scalar J) tightens the affordability mask, ``avail_mask`` ([n] bool —
+    a precomputed availability/participation wave) gates willingness
+    exactly like liveness, and ``charge_profile`` (a registered
+    ``ChargeProfile``, static) applies ``charge_dt`` sim-seconds of
+    harvesting after the charge step, capped at ``battery * energy_scale``
+    — all pure elementwise ``[n]`` ops, so the all-reduce count is
+    unchanged.  Defaults (None/0) trace the exact pre-scenario program.
+
     Returns ``(new_fleet, new_hidden, participants[n] bool, actions[n],
     summary)``.
     """
@@ -507,10 +561,13 @@ def dual_selection_energy_step(agent_params, hidden, fleet: FleetState,
     obs = fleet_obs_batch(fleet, round_idx, n_rounds)
     q, h = agent_step(agent_params, obs, hidden)              # [n, M+1]
     avail = fleet_affordability(fleet, model_sizes, model_fractions,
-                                local_epochs, batch_size)
+                                local_epochs, batch_size,
+                                budget_left=budget_left)
     actions = xp.argmax(xp.where(avail, q, -1e9), axis=-1)
     q_chosen = xp.take_along_axis(q, actions[:, None], axis=-1)[:, 0]
     willing = (actions < M) & fleet.alive
+    if avail_mask is not None:
+        willing = willing & avail_mask
     scores = xp.where(willing, q_chosen.astype(fleet.remaining.dtype),
                       -xp.inf)
     participants = fleet_topk_mask(scores, k)
@@ -519,6 +576,13 @@ def dual_selection_energy_step(agent_params, hidden, fleet: FleetState,
         fleet, model_sizes, model_fractions, local_epochs, batch_size)
     need = xp.take_along_axis(e_tra + e_com, m_idx[:, None], axis=-1)[:, 0]
     fleet, ok = fleet_charge(fleet, need, participants)
+    if charge_profile is not None and charge_dt > 0:
+        rate = charge_profile.rate(fleet, sim_time + 0.5 * charge_dt)
+        cap = fleet.battery * energy_scale
+        topped = xp.minimum(fleet.remaining + rate * charge_dt,
+                            xp.maximum(cap, fleet.remaining))
+        fleet = fleet.replace(remaining=xp.where(fleet.alive, topped,
+                                                 fleet.remaining))
     # NOTE: the summary's affordability block re-prices the POST-charge
     # fleet (it describes the state the next decision sees), so the mask
     # above cannot be reused here; XLA CSEs the shared cost subexpressions
@@ -529,7 +593,9 @@ def dual_selection_energy_step(agent_params, hidden, fleet: FleetState,
 
 
 dual_selection_energy_step_jit = jax.jit(
-    dual_selection_energy_step, static_argnames=("k", "n_rounds"))
+    dual_selection_energy_step,
+    static_argnames=("k", "n_rounds", "charge_profile", "charge_dt",
+                     "energy_scale"))
 
 
 class StaticTierSelector(SelectorBase):
@@ -542,7 +608,7 @@ class StaticTierSelector(SelectorBase):
         self.rng = np.random.default_rng(seed)
 
     def select(self, devices, round_idx, k, model_sizes, model_fractions,
-               local_epochs=5, batch_size=32):
+               local_epochs=5, batch_size=32, budget_left=None):
         fleet = as_fleet_state(devices)
         # jaxlint: allow(host-sync-in-hot-path) -- numpy baseline selector: one liveness pull per round
         alive = [int(i) for i in np.flatnonzero(np.asarray(fleet.alive))]
@@ -552,4 +618,8 @@ class StaticTierSelector(SelectorBase):
         for i in chosen:
             m = self.TIER_MODEL[fleet.tiers[i]]
             model_choice[i] = min(m, len(model_sizes) - 1)
+        if budget_left is not None:
+            chosen, model_choice = _budget_filter(
+                fleet, chosen, model_choice, model_sizes, model_fractions,
+                local_epochs, batch_size, budget_left)
         return Selection(participants=chosen, model_choice=model_choice)

@@ -1,0 +1,35 @@
+"""Pluggable energy scenarios: charge/harvesting profiles, availability
+waves and fleet-wide energy budgets driving :class:`repro.core.fleet.
+FleetState` through time (docs/ENERGY.md).
+
+Public surface (one-line contracts):
+
+* :class:`ChargeProfile` / :class:`AvailabilityProfile` — the vectorized
+  profile protocols (pure ``[n]``-array functions of ``(fleet, sim_time)``).
+* ``register_charge_profile`` / ``get_charge_profile`` /
+  ``known_charge_profiles`` — the charge-profile registry (mirrors the
+  :mod:`repro.models.family` registry idiom); likewise the
+  ``*_availability_profile`` trio.
+* :class:`EnergyScenario` — one run's resolved scenario: charge +
+  availability profiles, per-device profile arrays, the global joule
+  budget, and the trivial-path predicates that keep the default
+  configuration bit-for-bit with profile-free releases.
+* :func:`scenario_from_config` — build the scenario a flat ``FLConfig``
+  (or anything with the same fields) asks for.
+"""
+from repro.energy.profiles import (AvailabilityProfile, ChargeProfile,
+                                   EnergyScenario, get_availability_profile,
+                                   get_charge_profile,
+                                   known_availability_profiles,
+                                   known_charge_profiles,
+                                   register_availability_profile,
+                                   register_charge_profile,
+                                   scenario_from_config)
+
+__all__ = [
+    "AvailabilityProfile", "ChargeProfile", "EnergyScenario",
+    "get_availability_profile", "get_charge_profile",
+    "known_availability_profiles", "known_charge_profiles",
+    "register_availability_profile", "register_charge_profile",
+    "scenario_from_config",
+]

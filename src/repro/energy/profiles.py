@@ -1,0 +1,449 @@
+"""Charge / availability profiles + the per-run :class:`EnergyScenario`.
+
+The repo's energy model was a static battery: ``remaining`` only ever goes
+down (``fleet_charge``) and a device is live whenever ``alive`` says so.
+This module adds the scenario axis the DR-FL extensions target (PAPERS.md:
+intermittent battery-powered clients, arXiv 2208.04505; global energy
+budgets, arXiv 2506.10413) as three orthogonal, composable pieces:
+
+* **charge profiles** — how energy comes BACK: a pure ``[n]``-array
+  ``rate(fleet, sim_time)`` in J/s, built only from ``FleetState`` arrays
+  (``charge_rate`` amplitude, ``tz_phase`` time-of-day offset) and the sim
+  clock, so applying charge stays elementwise over the fleet axis and a
+  row-sharded fleet never gathers (the one-all-reduce shape of
+  ``dual_selection_energy_step`` is preserved);
+* **availability profiles** — when devices are ON: a ``[n]`` bool mask of
+  ``(fleet, sim_time)``; unavailable devices auto-abstain exactly like
+  dead ones (the async engine also keeps a numpy twin over its host-side
+  ``tz_phase`` mirror so per-event idle checks cost no device sync);
+* **the global budget** — a fleet-wide joule ceiling enforced by the
+  engine + every selector (see ``EnergyScenario.global_budget_j``).
+
+Profiles are small frozen dataclasses (hashable → safe as jit static
+arguments) resolved through registries mirroring the
+:mod:`repro.models.family` idiom, so adding a scenario is registering a
+class, not editing the engine.
+
+Backend-generic: every array expression works on numpy float64 fleets and
+jnp fleets alike (``_xp`` dispatch, same as :mod:`repro.core.fleet`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple, Type
+
+import numpy as np
+
+Array = Any  # np.ndarray | jax.Array — profile kernels are backend-generic
+
+#: dedicated RNG stream tag for per-device profile arrays — a distinct
+#: spawn key from the fleet/data streams, so enabling a profile never
+#: perturbs fleet sampling or Dirichlet shards for the same seed
+_PROFILE_RNG_TAG = 0xE67
+
+#: carbon-intensity cutoff for ``carbon_window`` participation pricing:
+#: devices abstain while their local intensity exceeds this fraction of
+#: the daily peak (the top-intensity ~1/3 of the day)
+CARBON_INTENSITY_CUTOFF = 0.75
+
+
+def _xp(fleet):
+    import jax
+    import jax.numpy as jnp
+    return jnp if isinstance(fleet.remaining, jax.Array) else np
+
+
+# ---------------------------------------------------------------------------
+# charge profiles
+# ---------------------------------------------------------------------------
+
+
+class ChargeProfile:
+    """How energy returns to the fleet.
+
+    ``rate`` is the whole contract: a pure ``[n]`` J/s array from fleet
+    arrays + the sim clock (no host syncs, no python-per-device work).
+    ``participation_ok`` optionally prices *participation* by the same
+    clock (``None`` = no gate); ``next_ok_host``/``ok_host`` are the numpy
+    twins the async engine's host-side dispatch mask consumes.
+    """
+
+    name: str = "abstract"
+
+    def rate(self, fleet, sim_time) -> Array:
+        """[n] instantaneous charge rate (J/s) at ``sim_time``."""
+        raise NotImplementedError
+
+    def participation_ok(self, fleet, sim_time) -> Optional[Array]:
+        """[n] bool participation gate, or None when this profile never
+        gates (the common case — only priced windows gate)."""
+        return None
+
+    def ok_host(self, tz_phase: np.ndarray, now: float) -> Optional[np.ndarray]:
+        """Numpy twin of :meth:`participation_ok` over the host ``tz_phase``
+        mirror (async engine dispatch mask)."""
+        return None
+
+    def next_ok_host(self, tz_phase: np.ndarray, now: float) -> np.ndarray:
+        """[n] earliest sim time >= now at which each device's gate is
+        open (``now`` where it already is) — the async engine's wake-event
+        schedule.  Profiles without a gate are always open."""
+        return np.full(np.shape(tz_phase), float(now))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantCharge(ChargeProfile):
+    """Flat trickle charge at each device's ``charge_rate`` J/s.
+
+    With the default ``charge_rate = 0`` amplitude this is exactly the
+    pre-profile energy model (no recharge ever) — the scenario layer skips
+    the charge program entirely in that case, keeping the default path
+    bit-for-bit."""
+
+    name: str = "constant"
+    period: float = 86400.0             # unused; kept for a uniform ctor
+
+    def rate(self, fleet, sim_time) -> Array:
+        return fleet.charge_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class SolarCharge(ChargeProfile):
+    """Solar harvesting: a phase-shifted sinusoid clipped at zero.
+
+    ``rate_n(t) = charge_rate_n * max(0, sin(2π (t/period + tz_phase_n)))``
+    — per-device amplitude (panel size / weather) and phase (longitude:
+    local solar time IS the timezone, so the same ``tz_phase`` array also
+    drives diurnal availability).  Day-average yield is ``amplitude / π``.
+    """
+
+    name: str = "solar"
+    period: float = 86400.0
+
+    def rate(self, fleet, sim_time) -> Array:
+        xp = _xp(fleet)
+        ang = 2.0 * math.pi * (sim_time / self.period + fleet.tz_phase)
+        return fleet.charge_rate * xp.maximum(xp.sin(ang), 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CarbonWindowCharge(ChargeProfile):
+    """Carbon/price-aware windows: charging AND participation priced by a
+    time-of-day grid-intensity curve.
+
+    Local intensity ``I_n(t) = 0.5 - 0.5 cos(2π (t/period + tz_phase_n))``
+    (0 at local midnight, 1 at local peak).  Devices charge at
+    ``charge_rate * (1 - I)`` — grid energy flows when it is clean/cheap —
+    and abstain from training while ``I > CARBON_INTENSITY_CUTOFF`` (the
+    dirty peak), so the selector must schedule around each device's
+    window."""
+
+    name: str = "carbon_window"
+    period: float = 86400.0
+
+    def _intensity(self, xp, tz_phase, sim_time):
+        ang = 2.0 * math.pi * (sim_time / self.period + tz_phase)
+        return 0.5 - 0.5 * xp.cos(ang)
+
+    def rate(self, fleet, sim_time) -> Array:
+        xp = _xp(fleet)
+        return fleet.charge_rate * (
+            1.0 - self._intensity(xp, fleet.tz_phase, sim_time))
+
+    def participation_ok(self, fleet, sim_time) -> Array:
+        xp = _xp(fleet)
+        return (self._intensity(xp, fleet.tz_phase, sim_time)
+                <= CARBON_INTENSITY_CUTOFF)
+
+    def ok_host(self, tz_phase: np.ndarray, now: float) -> np.ndarray:
+        return (self._intensity(np, np.asarray(tz_phase, np.float64), now)
+                <= CARBON_INTENSITY_CUTOFF)
+
+    def next_ok_host(self, tz_phase: np.ndarray, now: float) -> np.ndarray:
+        # I <= cutoff  <=>  cos(2π x) >= 1 - 2*cutoff, open on the phase
+        # band [1 - x_c, 1 + x_c] around each whole turn (x_c from acos);
+        # a blocked device reopens when its phase next reaches 1 - x_c
+        tz = np.asarray(tz_phase, np.float64)
+        x = (now / self.period + tz) % 1.0
+        x_c = math.acos(1.0 - 2.0 * CARBON_INTENSITY_CUTOFF) / (2.0 * math.pi)
+        blocked = (x > x_c) & (x < 1.0 - x_c)
+        return np.where(blocked, now + ((1.0 - x_c) - x) * self.period, now)
+
+
+# ---------------------------------------------------------------------------
+# availability profiles
+# ---------------------------------------------------------------------------
+
+
+class AvailabilityProfile:
+    """When devices are reachable at all (user-traffic waves).
+
+    ``available`` is the device-side mask; ``available_host`` /
+    ``next_available_host`` are the numpy twins over the async engine's
+    host ``tz_phase`` mirror."""
+
+    name: str = "abstract"
+
+    def available(self, fleet, sim_time) -> Optional[Array]:
+        """[n] bool mask, or None when every device is always available."""
+        return None
+
+    def available_host(self, tz_phase: np.ndarray,
+                       now: float) -> Optional[np.ndarray]:
+        return None
+
+    def next_available_host(self, tz_phase: np.ndarray,
+                            now: float) -> np.ndarray:
+        return np.full(np.shape(tz_phase), float(now))
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysAvailable(AvailabilityProfile):
+    """Every alive device is always dispatchable — the pre-profile
+    semantics, and the trivial default."""
+
+    name: str = "always"
+    period: float = 86400.0
+    duty: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalAvailability(AvailabilityProfile):
+    """Diurnal user-traffic wave: device n is idle-and-chargeable for the
+    first ``duty`` fraction of its LOCAL day (phones train overnight on
+    the charger), offline for the rest.
+
+    ``frac_n(t) = (t/period + tz_phase_n) mod 1``; available while
+    ``frac < duty``.  Shares ``tz_phase`` with solar charging — local
+    solar time is the timezone."""
+
+    name: str = "diurnal"
+    period: float = 86400.0
+    duty: float = 0.5
+
+    def _frac(self, xp, tz_phase, sim_time):
+        return (sim_time / self.period + tz_phase) % 1.0
+
+    def available(self, fleet, sim_time) -> Array:
+        return self._frac(_xp(fleet), fleet.tz_phase, sim_time) < self.duty
+
+    def available_host(self, tz_phase: np.ndarray, now: float) -> np.ndarray:
+        return self._frac(np, np.asarray(tz_phase, np.float64),
+                          now) < self.duty
+
+    def next_available_host(self, tz_phase: np.ndarray,
+                            now: float) -> np.ndarray:
+        tz = np.asarray(tz_phase, np.float64)
+        frac = self._frac(np, tz, now)
+        return np.where(frac < self.duty, now,
+                        now + (1.0 - frac) * self.period)
+
+
+# ---------------------------------------------------------------------------
+# registries (the ModelFamily register/get/known idiom)
+# ---------------------------------------------------------------------------
+
+_CHARGE_REGISTRY: Dict[str, Type[ChargeProfile]] = {}
+_AVAIL_REGISTRY: Dict[str, Type[AvailabilityProfile]] = {}
+
+
+def register_charge_profile(cls: Type[ChargeProfile],
+                            name: Optional[str] = None) -> Type[ChargeProfile]:
+    """Register a charge-profile class under ``cls.name`` (or ``name``)."""
+    _CHARGE_REGISTRY[name or cls.name] = cls
+    return cls
+
+
+def register_availability_profile(
+        cls: Type[AvailabilityProfile],
+        name: Optional[str] = None) -> Type[AvailabilityProfile]:
+    _AVAIL_REGISTRY[name or cls.name] = cls
+    return cls
+
+
+def known_charge_profiles() -> Tuple[str, ...]:
+    return tuple(sorted(_CHARGE_REGISTRY))
+
+
+def known_availability_profiles() -> Tuple[str, ...]:
+    return tuple(sorted(_AVAIL_REGISTRY))
+
+
+def get_charge_profile(name: str, period: float = 86400.0) -> ChargeProfile:
+    try:
+        cls = _CHARGE_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown charge profile {name!r} (registered: "
+            f"{', '.join(known_charge_profiles())})") from None
+    return cls(period=float(period))
+
+
+def get_availability_profile(name: str, period: float = 86400.0,
+                             duty: float = 1.0) -> AvailabilityProfile:
+    try:
+        cls = _AVAIL_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown availability profile {name!r} (registered: "
+            f"{', '.join(known_availability_profiles())})") from None
+    return cls(period=float(period), duty=float(duty))
+
+
+register_charge_profile(ConstantCharge)
+register_charge_profile(SolarCharge)
+register_charge_profile(CarbonWindowCharge)
+register_availability_profile(AlwaysAvailable)
+register_availability_profile(DiurnalAvailability)
+
+
+# ---------------------------------------------------------------------------
+# the per-run scenario
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyScenario:
+    """One run's resolved energy scenario.
+
+    The three ``trivial_*`` predicates gate EVERY new engine behavior at
+    the python level: a trivial piece traces zero extra programs and pulls
+    zero extra host syncs, so the default configuration
+    (``charge_profile="constant"``, ``charge_rate=0``,
+    ``availability_profile="always"``, ``global_budget_j=0``) runs the
+    exact same jit programs — and produces the exact same bits — as the
+    profile-free engine (tests/test_energy_profiles.py pins this against
+    frozen trajectories)."""
+
+    charge: ChargeProfile
+    availability: AvailabilityProfile
+    charge_rate: float = 0.0            # fleet-mean amplitude, J/s
+    global_budget_j: float = 0.0        # 0 = unlimited
+    energy_scale: float = 1.0           # recharge cap: battery * scale
+
+    # -- trivial-path predicates ------------------------------------------
+    @property
+    def trivial_charge(self) -> bool:
+        """True when no joule can ever flow back into the fleet."""
+        return self.charge_rate == 0.0
+
+    @property
+    def trivial_availability(self) -> bool:
+        """True when no device is ever gated out by time of day (neither
+        an availability wave nor a priced participation window)."""
+        return (isinstance(self.availability, AlwaysAvailable)
+                and type(self.charge).participation_ok
+                is ChargeProfile.participation_ok)
+
+    @property
+    def budget_active(self) -> bool:
+        return self.global_budget_j > 0.0
+
+    @property
+    def is_trivial(self) -> bool:
+        return (self.trivial_charge and self.trivial_availability
+                and not self.budget_active)
+
+    # -- per-device profile arrays ----------------------------------------
+    def init_fleet(self, fleet, seed: int):
+        """Seed the per-device profile arrays on a fresh fleet:
+        ``tz_phase`` ~ U[0, 1) (longitude / local solar time) and
+        ``charge_rate`` ~ amplitude * U[0.7, 1.3] (panel/charger
+        heterogeneity).  Draw order is fixed and the stream is private
+        (spawned off ``(seed, _PROFILE_RNG_TAG)``), so the same seed gives
+        the same devices the same phases across every scenario."""
+        xp = _xp(fleet)
+        rng = np.random.default_rng((int(seed), _PROFILE_RNG_TAG))
+        n = len(fleet)
+        tz = rng.uniform(0.0, 1.0, size=n)
+        amp = self.charge_rate * rng.uniform(0.7, 1.3, size=n)
+        dt = fleet.remaining.dtype
+        return fleet.replace(charge_rate=xp.asarray(amp, dt),
+                             tz_phase=xp.asarray(tz, dt))
+
+    # -- applying charge over a sim-time interval -------------------------
+    def apply_charge(self, fleet, t0: float, t1: float):
+        """Integrate the charge profile over ``[t0, t1]`` (midpoint rule —
+        exact for constant rates, second-order for the day-scale curves
+        against round-scale steps) and top up every ALIVE device, capped
+        at its scaled capacity ``battery * energy_scale``.  Dead devices
+        stay dead and hold their (zeroed) charge — harvesting does not
+        resurrect a drained device, matching ``fleet_charge``'s
+        kill-on-overcommit semantics."""
+        if t1 <= t0:
+            return fleet
+        xp = _xp(fleet)
+        rate = self.charge.rate(fleet, 0.5 * (t0 + t1))
+        cap = fleet.battery * self.energy_scale
+        topped = xp.minimum(fleet.remaining + rate * (t1 - t0),
+                            xp.maximum(cap, fleet.remaining))
+        return fleet.replace(remaining=xp.where(fleet.alive, topped,
+                                                fleet.remaining))
+
+    # -- availability masks -----------------------------------------------
+    def available(self, fleet, sim_time) -> Optional[Array]:
+        """[n] bool device-side participation mask, or None when trivial
+        (callers skip the AND entirely — no extra program)."""
+        masks = []
+        av = self.availability.available(fleet, sim_time)
+        if av is not None:
+            masks.append(av)
+        gate = self.charge.participation_ok(fleet, sim_time)
+        if gate is not None:
+            masks.append(gate)
+        if not masks:
+            return None
+        out = masks[0]
+        for m in masks[1:]:
+            out = out & m
+        return out
+
+    def available_host(self, tz_phase: np.ndarray,
+                       now: float) -> Optional[np.ndarray]:
+        """Numpy twin of :meth:`available` over the async engine's host
+        ``tz_phase`` mirror — the per-event dispatch mask costs no device
+        sync."""
+        masks = []
+        av = self.availability.available_host(tz_phase, now)
+        if av is not None:
+            masks.append(av)
+        gate = self.charge.ok_host(tz_phase, now)
+        if gate is not None:
+            masks.append(gate)
+        if not masks:
+            return None
+        out = masks[0]
+        for m in masks[1:]:
+            out = out & m
+        return out
+
+    def next_available_host(self, tz_phase: np.ndarray, now: float) -> float:
+        """Earliest sim time > now at which at least one of the given
+        devices passes every gate — the async engine's wake-event time
+        when availability blocked a whole dispatch.  Conservative under
+        stacked gates (takes each device's max next-open; a wake that
+        finds the gate shut again just reschedules)."""
+        tz = np.asarray(tz_phase, np.float64)
+        if tz.size == 0:
+            return float(now)
+        nxt = np.maximum(self.availability.next_available_host(tz, now),
+                         self.charge.next_ok_host(tz, now))
+        t = float(nxt.min())
+        return t if t > now else float(now) + 1e-6
+
+
+def scenario_from_config(cfg) -> EnergyScenario:
+    """Resolve the :class:`EnergyScenario` a flat config asks for (any
+    object with the ``charge_profile``/``availability_profile`` field
+    group works — ``FLConfig`` and duck-typed bench configs alike)."""
+    period = float(getattr(cfg, "charge_period", 86400.0))
+    return EnergyScenario(
+        charge=get_charge_profile(
+            getattr(cfg, "charge_profile", "constant"), period=period),
+        availability=get_availability_profile(
+            getattr(cfg, "availability_profile", "always"), period=period,
+            duty=float(getattr(cfg, "availability_duty", 1.0))),
+        charge_rate=float(getattr(cfg, "charge_rate", 0.0)),
+        global_budget_j=float(getattr(cfg, "global_budget_j", 0.0)),
+        energy_scale=float(getattr(cfg, "energy_scale", 1.0)))

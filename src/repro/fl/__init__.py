@@ -4,6 +4,10 @@ from repro.fl.spec import (EnergySpec, EngineSpec, MarlSpec,  # noqa: F401
                            ensure_flat_config)
 from repro.fl.engine import (RoundEngine, build_world,  # noqa: F401
                              resolve_client_executor, sync_task_budget)
+from repro.energy import (EnergyScenario,  # noqa: F401
+                          known_availability_profiles, known_charge_profiles,
+                          register_availability_profile,
+                          register_charge_profile, scenario_from_config)
 from repro.fl.environment import FLEnv, FLEnvConfig  # noqa: F401
 from repro.fl.faults import FaultEvent, FaultPlan  # noqa: F401
 from repro.core.fleet import (FleetState, fleet_summary,  # noqa: F401

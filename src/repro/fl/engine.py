@@ -71,6 +71,7 @@ from repro.core.fleet import (FleetState, fleet_charge_jit, fleet_connect,
 from repro.core.selection import MarlSelector
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import synthetic_image_dataset
+from repro.energy import EnergyScenario, scenario_from_config
 from repro.fl import batch as fl_batch
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
@@ -106,6 +107,40 @@ class World:
     fractions: tuple
     n_total: int
     family: ModelFamily = None
+    scenario: EnergyScenario = None
+
+
+def _validate_energy_feasibility(cfg, fleet, sizes, fractions) -> None:
+    """Fail fast on budgets no fresh device can survive.
+
+    ``fleet_charge`` uses a strict ``remaining > need`` survival check: a
+    device whose FULL battery (``battery * energy_scale``) cannot cover even
+    its cheapest submodel dies the first time any selector picks it — at
+    small scales that silently wipes the whole fleet in round 0.  Surface
+    the misconfiguration at build time instead, naming the offending
+    devices and their cheapest submodel."""
+    from repro.core.fleet import fleet_cost_matrix
+    _, _, e_tra, e_com = fleet_cost_matrix(fleet, sizes, fractions,
+                                           cfg.local_epochs, cfg.batch_size)
+    # jaxlint: allow(host-sync-in-hot-path) -- one-time build_world validation pull, before any round runs
+    need, battery = jax.device_get((e_tra + e_com, fleet.battery))
+    need = np.asarray(need, np.float64)
+    fresh = np.asarray(battery, np.float64) * float(cfg.energy_scale)
+    min_need = need.min(axis=1)
+    bad = np.flatnonzero(min_need >= fresh)
+    if bad.size:
+        cheapest = need.argmin(axis=1)
+        detail = "; ".join(
+            f"device {int(i)}: cheapest submodel {int(cheapest[i])} needs "
+            f"{min_need[i]:.1f}J >= fresh battery {fresh[i]:.1f}J"
+            for i in bad[:5])
+        more = f" (+{bad.size - 5} more)" if bad.size > 5 else ""
+        raise ValueError(
+            f"energy.scale={cfg.energy_scale} leaves {bad.size}/{len(fresh)}"
+            " device(s) unable to afford even their cheapest submodel on a "
+            "FULL battery — they die the first round any selector picks "
+            f"them (fleet_charge survival is strict '>'): {detail}{more}. "
+            "Raise energy.scale, or lower local_epochs/model cost.")
 
 
 def build_world(cfg) -> World:
@@ -125,6 +160,13 @@ def build_world(cfg) -> World:
                              data_sizes=[len(p) for p in parts],
                              backend="jax")
     fleet = fleet.replace(remaining=fleet.battery * cfg.energy_scale)
+    scenario = scenario_from_config(cfg)
+    if not scenario.is_trivial:
+        # profile parameter arrays (harvest amplitude, timezone phase) are
+        # drawn for the FULL fleet — hotplug joiners included — from a
+        # dedicated RNG stream, so the default scenario keeps the fleet
+        # bit-for-bit untouched
+        fleet = scenario.init_fleet(fleet, cfg.seed)
     if cfg.hotplug_n:                   # hot-plug devices: not yet connected
         fleet = fleet_disconnect(fleet, cfg.n_devices)
     if getattr(cfg, "fleet_mesh", 0) not in (0, 1):
@@ -142,10 +184,11 @@ def build_world(cfg) -> World:
     # CPU-budget compute proxy; batteries must see paper-scale costs for the
     # wooden-barrel dynamics to reproduce.
     sizes, fractions = family.cost_model(cfg.num_classes)
+    _validate_energy_feasibility(cfg, fleet, sizes, fractions)
     return World(x_tr=x_tr, y_tr=y_tr, x_val=x_val, y_val=y_val, parts=parts,
                  fleet=fleet, global_params=global_params, n_models=M,
                  sizes=sizes, fractions=fractions, n_total=n_total,
-                 family=family)
+                 family=family, scenario=scenario)
 
 
 def _check_selection(sel, n_total: int) -> None:
@@ -458,6 +501,20 @@ class RoundEngine:
             # gathers mini-batches on device instead of per-step host copies
             x_dev, y_dev = jnp.asarray(w.x_tr), jnp.asarray(w.y_tr)
 
+        # energy scenario (repro.energy): every hook below is gated on the
+        # python-level trivial_* flags, so the default config runs the exact
+        # pre-scenario program — same traces, same pulls, same bits
+        scenario = w.scenario
+        gate_avail = not scenario.trivial_availability
+        recharge = not scenario.trivial_charge
+        budget_active = scenario.budget_active
+        tz_host = alive_host = None
+        if gate_avail:
+            # jaxlint: allow(host-sync-in-hot-path) -- availability-scenario one-time setup pull of the host phase/alive mirrors
+            tz_a, alive_a0 = jax.device_get((fleet.tz_phase, fleet.alive))
+            tz_host = np.asarray(tz_a, np.float64)
+            alive_host = np.asarray(alive_a0, bool).copy()
+
         w1, w2, w3 = cfg.reward_weights
         rs = self._resume
         if rs is None:
@@ -475,6 +532,7 @@ class RoundEngine:
             n_agg = 0
             hotplug_done = False
             t_start = 0
+            budget_spent = 0.0
         else:
             fleet = self._restore_fleet(fleet, rs["fleet"])
             global_params = rs["global_params"]
@@ -485,7 +543,12 @@ class RoundEngine:
             n_agg = int(rs["n_agg"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
             hotplug_done = bool(rs["hotplug_done"])
             t_start = int(rs["next_round"])  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+            budget_spent = float(rs.get("budget_spent", 0.0))  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
+        if budget_active and "budget" not in hist:
+            hist["budget"] = {"limit": float(cfg.global_budget_j),
+                              "spent": 0.0, "overrun": 0.0, "trimmed": 0}
         fleet_dead = False
+        budget_exhausted = False
 
         for t in range(t_start, cfg.n_rounds):
             t0 = time.time()
@@ -496,12 +559,33 @@ class RoundEngine:
                 # with full batteries
                 fleet = fleet_connect(fleet, cfg.n_devices, cfg.energy_scale)
                 hotplug_done = True
+                if alive_host is not None:
+                    alive_host[cfg.n_devices:] = True
             # Top-K budget tracks the CONNECTED fleet (see ISSUE 1 fix).
             n_connected = cfg.n_devices + (cfg.hotplug_n if hotplug_done
                                            else 0)
             k = max(1, int(round(cfg.participation * n_connected)))
-            sel = selector.select(fleet, t, k, w.sizes, w.fractions,
-                                  cfg.local_epochs, cfg.batch_size)
+            sel_fleet = fleet
+            if gate_avail:
+                # diurnal/carbon gate: offline devices look dead to the
+                # selector this round (they auto-abstain, PR 2 semantics)
+                av_host = scenario.available_host(tz_host, sim_time)
+                if alive_host.any() and not (av_host & alive_host).any():
+                    # whole surviving fleet is offline — fast-forward the
+                    # clock to the next opening instead of burning rounds
+                    sim_time = scenario.next_available_host(
+                        tz_host[alive_host], sim_time)
+                av_d = scenario.available(fleet, sim_time)
+                sel_fleet = fleet.replace(alive=fleet.alive & av_d)
+            sel_kw = {}
+            budget_left = overrun = 0.0
+            if budget_active:
+                # per-pick hard cap: selectors refuse actions whose cost
+                # alone no longer fits the remaining fleet-wide budget
+                budget_left = float(cfg.global_budget_j) - budget_spent
+                sel_kw["budget_left"] = budget_left
+            sel = selector.select(sel_fleet, t, k, w.sizes, w.fractions,
+                                  cfg.local_epochs, cfg.batch_size, **sel_kw)
             _check_selection(sel, w.n_total)
 
             choice = np.asarray(sel.model_choice, np.int64)
@@ -514,6 +598,42 @@ class RoundEngine:
             m_col = jnp.asarray(m_idx)[:, None]
             t_cost_d = jnp.take_along_axis(t_tra_m + t_com_m, m_col, 1)[:, 0]
             need_d = jnp.take_along_axis(e_tra_m + e_com_m, m_col, 1)[:, 0]
+            had_picks = bool(active.any())
+            budget_starved = False
+            if budget_active and not had_picks:
+                # no picks at all: decide whether the per-pick budget gate
+                # (not drained batteries) closed the round — if some alive
+                # device could fund its cheapest submodel from its OWN
+                # battery but not from the remaining global budget, further
+                # rounds can never dispatch either
+                # jaxlint: allow(host-sync-in-hot-path) -- budget-scenario termination disambiguation; runs only when a round selects nobody
+                mn_a, rem_a, al_a = jax.device_get(
+                    ((e_tra_m + e_com_m).min(axis=1), fleet.remaining,
+                     fleet.alive))
+                mn = np.asarray(mn_a, np.float64)
+                own_ok = (np.asarray(al_a, bool)
+                          & (mn < np.asarray(rem_a, np.float64)))
+                if own_ok.any() and mn[own_ok].min() > budget_left:
+                    budget_starved = True
+            if budget_active:
+                # cumulative hard cap: each pick respected the per-pick
+                # budget gate, but together they can still overrun — trim
+                # in selection order and charge the trimmed cost to the
+                # round's reward as an overrun penalty
+                # jaxlint: allow(host-sync-in-hot-path) -- budget-scenario-only extra pull: per-pick costs for the cumulative cap
+                need_h = np.asarray(jax.device_get(need_d), np.float64)
+                left = budget_left
+                for i in sel.participants:
+                    if not active[i]:
+                        continue
+                    if need_h[i] <= left + 1e-9:
+                        left -= float(need_h[i])
+                    else:
+                        active[i] = False
+                        overrun += float(need_h[i])
+                # attempted cost counts as spent (deaths waste no more than
+                # their attempt), so the cap can never be overdrawn
+                budget_spent += float(need_h[active].sum())
             fleet, ok_d = fleet_charge_jit(fleet, need_d,
                                            jnp.asarray(active))
             # jaxlint: allow(host-sync-in-hot-path) -- the one batched pull per round head: charge outcome + per-device round times
@@ -523,6 +643,11 @@ class RoundEngine:
             t_round = float(t_cost[survivors].max()) if survivors.any() else 0.0
             # straggler wait: finished participants idle at the barrier
             idle_round = float((t_round - t_cost[survivors]).sum())
+            if recharge and t_round > 0.0:
+                # harvesting: alive devices trickle-charge while the round
+                # runs (midpoint-rate rectangle over [sim_time, +t_round])
+                fleet = scenario.apply_charge(fleet, sim_time,
+                                              sim_time + t_round)
 
             # contributors: survivors with local data (large-fleet Dirichlet
             # splits can leave a device with no samples — it still paid the
@@ -597,6 +722,10 @@ class RoundEngine:
             e_now = float(e_now_a)
             reward = (w1 * (acc - prev_acc) - w2 * (e_prev - e_now)
                       - w3 * (t_round / 60.0))
+            if budget_active and overrun:
+                # budget-overrun penalty: energy the fleet PROPOSED to spend
+                # past the global cap, priced like wasted joules
+                reward -= w2 * overrun
             sim_time += t_round
             selector.observe_reward(reward, sim_time=sim_time)
             prev_acc, e_prev = acc, e_now
@@ -620,6 +749,13 @@ class RoundEngine:
             hist["sim_time"].append(sim_time)
             hist["idle"].append(idle_round)
             hist["idle_time"] += idle_round
+            if alive_host is not None:
+                alive_host = np.asarray(alive_a, bool).copy()
+            if budget_active:
+                hist["budget"]["spent"] = budget_spent
+                hist["budget"]["overrun"] += overrun
+                if overrun:
+                    hist["budget"]["trimmed"] += 1
             if self.verbose:
                 print(f"  round {t:3d}: acc={acc:.3f} exits="
                       f"{np.round(np.asarray(accs), 3)} alive={alive_now}"
@@ -628,21 +764,33 @@ class RoundEngine:
             if alive_now == 0:
                 fleet_dead = True
                 break
+            if budget_active and (
+                    float(cfg.global_budget_j) - budget_spent <= 1e-9
+                    or budget_starved
+                    or (had_picks and not active.any())):
+                # nothing left to fund (or the whole round's picks were
+                # trimmed): stop here rather than ticking unfunded rounds
+                budget_exhausted = True
+                break
             if (self.ckpt is not None and self.ckpt_every > 0
                     and (t + 1) % self.ckpt_every == 0):
                 self._flush_quarantine(hist)
                 state = self._base_snapshot(fleet, global_params, hist)
                 state.update(next_round=t + 1, prev_acc=prev_acc,
                              e_prev=e_prev, sim_time=sim_time, n_agg=n_agg,
-                             hotplug_done=hotplug_done)
+                             hotplug_done=hotplug_done,
+                             budget_spent=budget_spent)
                 self.ckpt.save(state, self._ckpt_meta(t + 1))
                 self._after_save()
 
         hist["terminated"] = {
-            "reason": "fleet_dead" if fleet_dead else "completed",
+            "reason": ("budget_exhausted" if budget_exhausted
+                       else "fleet_dead" if fleet_dead else "completed"),
             "rounds": len(hist["acc_mean"]), "n_rounds": cfg.n_rounds,
             "sim_time": sim_time,
         }
+        if budget_exhausted:
+            hist["terminated"]["budget"] = "energy"
         hist["n_aggregations"] = n_agg
         hist["sim_time_total"] = sim_time
         return self._finalize(hist, global_params)
@@ -663,6 +811,17 @@ class RoundEngine:
         budget = int(getattr(cfg, "async_task_budget", 0)
                      or sync_task_budget(cfg))
         w1, w2, w3 = cfg.reward_weights
+
+        # energy scenario hooks — python-gated like sync, so the default
+        # config dispatches the exact pre-scenario event timeline
+        scenario = w.scenario
+        gate_avail = not scenario.trivial_availability
+        recharge = not scenario.trivial_charge
+        budget_active = scenario.budget_active
+        tz_host = None
+        if gate_avail:
+            # jaxlint: allow(host-sync-in-hot-path) -- availability-scenario one-time setup pull of the host phase mirror
+            tz_host = np.asarray(jax.device_get(fleet.tz_phase), np.float64)
 
         x_dev = y_dev = None
         if self.executor == "batched":
@@ -698,7 +857,9 @@ class RoundEngine:
                          hotplug_done=not cfg.hotplug_n, acc_prev=acc_prev,
                          window_t0=0.0, window_wall0=time.time(),
                          window_reward=0.0, window_idle=0.0,
-                         window_lost=0, tid=0)
+                         window_lost=0, tid=0,
+                         budget_spent=0.0, budget_blocked=False,
+                         last_charge_t=0.0)
             heap: list = []
             cohorts: Dict[int, dict] = {}   # one per selector.select call
             last_done: Dict[int, float] = {}
@@ -731,6 +892,9 @@ class RoundEngine:
             hist = rs["hist"]
             state = dict(rs["state"])
             state["window_wall0"] = time.time()
+            state.setdefault("budget_spent", 0.0)
+            state.setdefault("budget_blocked", False)
+            state.setdefault("last_charge_t", float(state["now"]))
             cohorts = {int(k): dict(v) for k, v in rs["cohorts"].items()}  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
             last_done = {int(k): float(v)  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
                          for k, v in rs["last_done"].items()}
@@ -748,11 +912,14 @@ class RoundEngine:
             # entries re-share one task object per tid
             heap = [(float(tt), int(sq), kind,  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
                      tasks[int(ref)] if kind in ("done", "reap")  # jaxlint: allow(host-sync-in-hot-path) -- one-time resume, host values
-                     else dict(ref))
+                     else dict(ref) if kind == "fault" else None)
                     for tt, sq, kind, ref in rs["heap"]]
             for task in tasks.values():
                 if not task.get("done") and not task.get("reaped"):
                     task_by_dev[task["device"]] = task
+        if budget_active and "budget" not in hist:
+            hist["budget"] = {"limit": float(cfg.global_budget_j),
+                              "spent": 0.0, "overrun": 0.0, "trimmed": 0}
 
         def n_connected():
             return cfg.n_devices + (cfg.hotplug_n if state["hotplug_done"]
@@ -800,17 +967,36 @@ class RoundEngine:
         def try_dispatch(n_sel) -> int:
             nonlocal fleet, alive_host
             now = state["now"]
+            if recharge and now > state["last_charge_t"]:
+                # harvest the idle gap since the last dispatch tick BEFORE
+                # costing/charging, so e_before reflects the topped-up fleet
+                fleet = scenario.apply_charge(fleet, state["last_charge_t"],
+                                              now)
+                state["last_charge_t"] = now
             idle = alive_host & (busy64 <= now + 1e-9)
+            if gate_avail:
+                # offline devices (diurnal window / carbon curfew) simply
+                # aren't idle candidates; the heap-empty wake event below
+                # reopens the timeline when everyone is offline
+                idle &= scenario.available_host(tz_host, now)
             if not idle.any():
                 return 0
+            budget_left = 0.0
+            if budget_active:
+                budget_left = (float(cfg.global_budget_j)
+                               - state["budget_spent"])
+                if budget_left <= 1e-9:
+                    state["budget_blocked"] = True
+                    return 0
             cid = state["n_cohorts"]
             state["n_cohorts"] += 1
             cohorts[cid] = {"pending": 0, "reward": 0.0}
             alive_mask = (jnp.asarray(idle) if fleet_is_jax(fleet) else idle)
+            sel_kw = {"budget_left": budget_left} if budget_active else {}
             sel = selector.select(fleet.replace(alive=alive_mask),
                                   state["vround"], n_sel, w.sizes,
                                   w.fractions, cfg.local_epochs,
-                                  cfg.batch_size)
+                                  cfg.batch_size, **sel_kw)
             _check_selection(sel, w.n_total)
             choice = np.asarray(sel.model_choice, np.int64)
             active = choice >= 0
@@ -822,17 +1008,55 @@ class RoundEngine:
                 m_col = jnp.asarray(m_idx)[:, None]
                 need_d = jnp.take_along_axis(e_tra + e_com, m_col,
                                              1)[:, 0]
-                # jaxlint: allow(host-sync-in-hot-path) -- first of the two batched pulls per dispatch tick: per-task times for the event heap
-                t_cost = jax.device_get(
-                    jnp.take_along_axis(t_tra + t_com, m_col, 1)[:, 0])
+                t_cost_d = jnp.take_along_axis(t_tra + t_com, m_col, 1)[:, 0]
+                need_h = None
+                if budget_active:
+                    # jaxlint: allow(host-sync-in-hot-path) -- budget-scenario variant of the same first batched pull (extra values, same sync count)
+                    t_cost, need_h = jax.device_get((t_cost_d, need_d))
+                    need_h = np.asarray(need_h, np.float64)
+                else:
+                    # jaxlint: allow(host-sync-in-hot-path) -- first of the two batched pulls per dispatch tick: per-task times for the event heap
+                    t_cost = jax.device_get(t_cost_d)
                 if horizon > 0:
                     # only send work that can land inside the time budget
                     active &= (now + t_cost) <= horizon + 1e-9
                 allow = budget - state["tasks_started"]
                 kept = [i for i in sel.participants if active[i]][:allow]
+                if budget_active:
+                    # cumulative cap, trimmed in selection order (sync rule)
+                    left, funded, overrun = budget_left, [], 0.0
+                    for i in kept:
+                        if need_h[i] <= left + 1e-9:
+                            left -= float(need_h[i])
+                            funded.append(i)
+                        else:
+                            overrun += float(need_h[i])
+                    if overrun:
+                        credit(cid, -w2 * overrun)  # overrun penalty
+                        hist["budget"]["overrun"] += overrun
+                        hist["budget"]["trimmed"] += 1
+                    if kept and not funded:
+                        state["budget_blocked"] = True
+                    kept = funded
                 active = np.zeros(w.n_total, bool)
                 active[kept] = True
             if not active.any():
+                if budget_active and not state["budget_blocked"]:
+                    # nothing dispatched: was it the budget's per-pick gate,
+                    # or genuinely drained batteries?  Blocked only if some
+                    # idle device could afford its cheapest submodel from
+                    # its OWN battery but not from the remaining budget.
+                    _, _, e_tra, e_com = fleet_cost_matrix_jit(
+                        fleet, w.sizes, w.fractions, cfg.local_epochs,
+                        cfg.batch_size)
+                    # jaxlint: allow(host-sync-in-hot-path) -- budget-scenario termination disambiguation; runs only when a dispatch comes back empty
+                    min_need_a, rem_a = jax.device_get(
+                        ((e_tra + e_com).min(axis=1), fleet.remaining))
+                    min_need = np.asarray(min_need_a, np.float64)
+                    own_ok = idle & (min_need < np.asarray(rem_a,
+                                                           np.float64))
+                    if own_ok.any() and min_need[own_ok].min() > budget_left:
+                        state["budget_blocked"] = True
                 return 0
             e_before_d = fleet.remaining.sum()
             fleet, ok_d = fleet_charge_jit(fleet, need_d,
@@ -847,6 +1071,12 @@ class RoundEngine:
             hist["dropouts"] += int((active & ~ok).sum())
             # energy term at SEND time (includes batteries wasted by deaths)
             credit(cid, -w2 * (e_before - e_after))
+            if budget_active:
+                # attempted cost counts as spent (a death wastes at most its
+                # attempt), so the global cap can never be overdrawn
+                state["budget_spent"] += float(need_h[active].sum())
+                state["budget_blocked"] = False
+                hist["budget"]["spent"] = state["budget_spent"]
             started = [i for i in sel.participants if active[i] and ok[i]]
             if not started:
                 return 0
@@ -1195,7 +1425,9 @@ class RoundEngine:
             tasks_enc: Dict[int, Any] = {}
             heap_enc = []
             for tt, sq, kind, payload in heap:
-                if kind == "fault":
+                if kind == "wake":
+                    heap_enc.append((float(tt), int(sq), kind, None))
+                elif kind == "fault":
                     heap_enc.append((float(tt), int(sq), kind,
                                      dict(payload)))
                 else:
@@ -1252,6 +1484,23 @@ class RoundEngine:
                     commit_ready()
                     if heap:
                         continue
+                if (gate_avail and state["tasks_started"] < budget
+                        and not state["budget_blocked"]):
+                    # the timeline starved only because every idle device is
+                    # offline right now — wake at the next opening (diurnal
+                    # dawn / carbon-window reopen) and dispatch again
+                    idle_u = alive_host & (busy64 <= state["now"] + 1e-9)
+                    if idle_u.any() and not (
+                            scenario.available_host(tz_host, state["now"])
+                            & idle_u).any():
+                        t_wake = scenario.next_available_host(
+                            tz_host[idle_u], state["now"])
+                        if horizon <= 0 or t_wake < horizon - 1e-9:
+                            heapq.heappush(heap, (float(t_wake),
+                                                  state["seq"], "wake",
+                                                  None))
+                            state["seq"] += 1
+                            continue
                 break
             t_ev, _, kind, payload = heapq.heappop(heap)
             state["now"] = t_ev
@@ -1266,6 +1515,8 @@ class RoundEngine:
                 # (deadline > completion time), so release it here
                 process_reap(payload)
                 tasks.pop(payload["tid"], None)
+            elif kind == "wake":
+                pass            # availability wake: refill() below dispatches
             else:
                 process_fault(payload)
             refill()
@@ -1289,13 +1540,19 @@ class RoundEngine:
             _marl_train(marl, buffer, hist, fleet, state["vround"],
                         n_updates)
 
+        budget_kind = None
         if state["tasks_started"] >= budget:
             reason = "budget_exhausted"
+            budget_kind = "tasks"
         elif not bool(alive_host.any()):
             # every device (including all in-flight work) died: nothing can
             # ever be dispatched again — the terminal marker tells callers
             # the run ended early rather than silently under-delivering
             reason = "fleet_dead"
+        elif budget_active and state["budget_blocked"]:
+            # global energy budget can no longer fund any dispatch
+            reason = "budget_exhausted"
+            budget_kind = "energy"
         elif horizon > 0:
             reason = "horizon_reached"
         else:
@@ -1307,6 +1564,8 @@ class RoundEngine:
             "lost": hist["faults"]["n_reaped"],
             "sim_time": state["now"],
         }
+        if budget_kind is not None:
+            hist["terminated"]["budget"] = budget_kind
         hist["n_tasks"] = state["tasks_started"]
         hist["n_aggregations"] = state["version"]
         hist["sim_time_total"] = state["now"]

@@ -69,6 +69,16 @@ class FLConfig:
     hotplug_round: int = 0              # paper §4.2: hot-plug devices join at
     hotplug_n: int = 0                  # this round with fresh batteries
     energy_scale: float = 1.0           # scales battery to stress budgets
+    # --- energy scenarios (repro.energy; docs/ENERGY.md) -------------------
+    # pluggable harvesting/availability profiles + a fleet-wide joule
+    # budget; the defaults below are the trivial scenario, bit-for-bit
+    # identical to profile-free runs
+    charge_profile: str = "constant"    # constant | solar | carbon_window
+    charge_rate: float = 0.0            # fleet-mean harvest amplitude, J/s
+    charge_period: float = 86400.0      # profile day length, sim-seconds
+    availability_profile: str = "always"  # always | diurnal
+    availability_duty: float = 1.0      # fraction of the local day online
+    global_budget_j: float = 0.0        # fleet-wide joule budget (0 = off)
     server_lr: float = 0.7              # damps layer-aligned update drift
     # --- event-driven round engine (repro.fl.engine) -----------------------
     engine_mode: str = "sync"           # sync | async

@@ -146,16 +146,39 @@ class MarlSpec:
 
 @dataclasses.dataclass
 class EnergySpec:
-    """Battery scaling + the paper's §4.2 hot-plug scenario."""
+    """Battery scaling, the paper's §4.2 hot-plug scenario, and the
+    pluggable energy scenarios (repro.energy; docs/ENERGY.md): harvesting
+    charge profiles, availability waves, and the fleet-wide joule budget.
+    The profile defaults are the trivial scenario — bit-for-bit identical
+    to profile-free runs."""
     scale: float = 1.0                  # scales batteries to stress budgets
     hotplug_round: int = 0
     hotplug_n: int = 0
+    charge_profile: str = "constant"    # repro.energy charge registry key
+    charge_rate: float = 0.0            # fleet-mean harvest amplitude, J/s
+    charge_period: float = 86400.0      # profile day length, sim-seconds
+    availability_profile: str = "always"  # availability registry key
+    availability_duty: float = 1.0      # fraction of the local day online
+    global_budget_j: float = 0.0        # fleet-wide joule budget (0 = off)
 
     def __post_init__(self):
+        from repro.energy import (known_availability_profiles,
+                                  known_charge_profiles)
         _check(self.scale > 0, "energy.scale must be > 0")
         _check(self.hotplug_round >= 0,
                "energy.hotplug_round must be >= 0")
         _check(self.hotplug_n >= 0, "energy.hotplug_n must be >= 0")
+        _check_choice(self.charge_profile, known_charge_profiles(),
+                      "energy.charge_profile")
+        _check_choice(self.availability_profile,
+                      known_availability_profiles(),
+                      "energy.availability_profile")
+        _check(self.charge_rate >= 0, "energy.charge_rate must be >= 0")
+        _check(self.charge_period > 0, "energy.charge_period must be > 0")
+        _check(0 < self.availability_duty <= 1,
+               "energy.availability_duty must be in (0, 1]")
+        _check(self.global_budget_j >= 0,
+               "energy.global_budget_j must be >= 0")
 
 
 @dataclasses.dataclass
@@ -277,7 +300,13 @@ class SimulationSpec:
                 agent_budget=cfg.marl_agent_budget),
             energy=EnergySpec(
                 scale=cfg.energy_scale, hotplug_round=cfg.hotplug_round,
-                hotplug_n=cfg.hotplug_n),
+                hotplug_n=cfg.hotplug_n,
+                charge_profile=cfg.charge_profile,
+                charge_rate=cfg.charge_rate,
+                charge_period=cfg.charge_period,
+                availability_profile=cfg.availability_profile,
+                availability_duty=cfg.availability_duty,
+                global_budget_j=cfg.global_budget_j),
             resilience=ResilienceSpec(
                 checkpoint_dir=cfg.checkpoint_dir,
                 checkpoint_every=cfg.checkpoint_every,
@@ -310,7 +339,14 @@ class SimulationSpec:
             marl_episodes=self.marl.episodes,
             hotplug_round=self.energy.hotplug_round,
             hotplug_n=self.energy.hotplug_n,
-            energy_scale=self.energy.scale, server_lr=self.server_lr,
+            energy_scale=self.energy.scale,
+            charge_profile=self.energy.charge_profile,
+            charge_rate=self.energy.charge_rate,
+            charge_period=self.energy.charge_period,
+            availability_profile=self.energy.availability_profile,
+            availability_duty=self.energy.availability_duty,
+            global_budget_j=self.energy.global_budget_j,
+            server_lr=self.server_lr,
             engine_mode=self.engine.mode,
             staleness_decay=self.engine.staleness_decay,
             async_eval_every=self.engine.async_eval_every,
