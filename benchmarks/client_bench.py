@@ -27,10 +27,12 @@ compile counts are reported separately (``batched_compiles_warm``) —
 cohort churn re-compiles only when a bucket's pow2-padded (P, T) signature
 is new.
 
-Both registered model families run the same harness (``--family cnn``
-limits the sweep); BENCH_client.json records per-family medians with a
-``family`` field per row — the CNN rows keep the PR 3 emit names and
-configuration, so its numbers stay regression-comparable.
+Every registered model family runs the same harness (``--family cnn``
+limits the sweep) over its OWN corpus (``family.make_dataset`` — image
+rows for cnn/mlp, token windows for the transformer); BENCH_client.json
+records per-family medians with a ``family`` field per row — the CNN rows
+keep the PR 3 emit names and configuration, so its numbers stay
+regression-comparable.
 
     python -m benchmarks.client_bench                 # n=64/256/1024 sweep
     python -m benchmarks.client_bench --smoke         # n=64, 2 rounds (CI)
@@ -57,13 +59,12 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.data.partition import dirichlet_partition
-from repro.data.synthetic import synthetic_image_dataset
 from repro.fl import batch as fl_batch
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
 from repro.models.family import get_family
 
-FAMILIES = ("cnn", "mlp")
+FAMILIES = ("cnn", "mlp", "transformer")
 PARTICIPATION = 0.1
 EPOCHS = 2
 BATCH = 8
@@ -74,10 +75,13 @@ SERVER_LR = 0.7
 
 
 def _setup(n: int, family: str = "cnn", seed: int = 0):
-    x, y = synthetic_image_dataset(max(1500, 6 * n), 10, hw=HW, seed=seed)
+    fam = get_family(family)
+    # family-routed corpus; for image families this is the exact legacy
+    # synthetic_image_dataset call (bit-for-bit comparable rows)
+    x, y = fam.make_dataset(max(1500, 6 * n), 10, hw=HW, noise=1.0,
+                            seed=seed)
     parts = dirichlet_partition(y, n, 0.5, seed)
-    params = get_family(family).init(jax.random.PRNGKey(seed), 10,
-                                     width_mult=WIDTH, hw=HW)
+    params = fam.init(jax.random.PRNGKey(seed), 10, width_mult=WIDTH, hw=HW)
     return x, y, parts, params
 
 

@@ -1,8 +1,19 @@
-"""Batched serving demo: prefill (scoring) + greedy decode with a KV cache
-(ring buffer under sliding-window configs).
+"""Early-exit greedy decoding from the transformer family's global model.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+The serving-side payoff of depth-prefix training (docs/FAMILIES.md): the
+SAME parameter tree answers at any of its exits, so a battery-poor device
+decodes from exit 0 while a charged one uses the full depth — no
+re-download, no distillation.
+
+    PYTHONPATH=src python examples/serve_lm.py --gen 24
+    PYTHONPATH=src python examples/serve_lm.py --exit 0 --gen 24 \
+        --ckpt /tmp/lm.msgpack       # params saved by examples/train_lm.py
+
+Decoding recomputes the full context window each step (the family's
+training forward, ``seq``-token sliding window) — honest about what the
+FL-scale model is; KV-cache serving is the big-LM stack's job, not this
+demo's.  Without ``--ckpt`` the script first runs a few local DR-FL
+rounds so the decode has a trained tree to exercise.
 """
 import argparse
 import sys
@@ -14,57 +25,68 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.launch.steps import build_serve_step
-from repro.models import build, extra_inputs
+from repro.models.family import get_family
+
+
+def greedy_decode(fam, params, prompt, gen, exit_idx, seq):
+    """Greedy next-token loop over a sliding ``seq``-token window."""
+    toks = list(map(int, prompt))
+    for _ in range(gen):
+        window = jnp.asarray(toks[-seq:], jnp.int32)[None, :]
+        logits = fam.apply_all_exits(params, window)[exit_idx]
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks[len(prompt):]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi3-mini-3.8b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--ckpt", default=None,
+                    help="msgpack params from examples/train_lm.py")
+    ap.add_argument("--exit", dest="exit_idx", type=int, default=-1,
+                    help="exit head to decode from (-1 = deepest)")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=8)
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--train-rounds", type=int, default=6,
+                    help="warmup DR-FL rounds when no --ckpt is given")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model, serve_step = build_serve_step(cfg)
-    serve_step = jax.jit(serve_step, donate_argnums=(1,))
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    fam = get_family("transformer")
+    M = fam.num_submodels()
+    exit_idx = args.exit_idx % M
+    params = fam.init(jax.random.PRNGKey(args.seed), 10,
+                      width_mult=args.width, hw=args.seq)
+    if args.ckpt:
+        from repro.checkpoint import load_pytree
+        params = load_pytree(args.ckpt, params)
+        print("loaded", args.ckpt)
+    else:
+        print(f"no --ckpt: {args.train_rounds} local DR-FL warmup rounds")
+        x, y = fam.make_dataset(1200, 10, hw=args.seq, noise=1.0,
+                                seed=args.seed)
+        g = params
+        for rnd in range(args.train_rounds):
+            d, loss = fam.client_update("drfl", g, M - 1, x, y, epochs=1,
+                                        batch=32, lr=0.05,
+                                        seed=args.seed + rnd)
+            g = jax.tree.map(lambda a, b: a + b, g, d)
+            print(f"  round {rnd} loss={float(loss):.3f}")
+        params = g
 
-    B = args.batch
-    total = args.prompt_len + args.gen
-    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
-    extras = {k: jax.random.normal(key, shp).astype(dt) for k, (shp, dt)
-              in extra_inputs(cfg, B, total).items()}
-    cache = model.decode_init(params, B, total, extras=extras)
+    # prompt: a fresh window from the same Markov stream (held-out offset)
+    x_eval, _ = fam.make_dataset(64, 10, hw=args.seq, noise=0.0,
+                                 seed=args.seed + 1)
+    prompt = np.asarray(x_eval[0])
+    print(f"prompt tokens: {prompt.tolist()}")
 
-    # prefill by teacher-forcing the prompt through decode steps (exercises
-    # the cache path end to end; batch-scoring prefill uses launch.steps.
-    # build_prefill_step).
-    t0 = time.time()
-    tok = prompts[:, :1]
-    for t in range(args.prompt_len):
-        tok = prompts[:, t:t + 1]
-        next_tok, cache = serve_step(params, cache, tok, jnp.int32(t))
-    t_prefill = time.time() - t0
-
-    outs = []
-    t0 = time.time()
-    tok = next_tok
-    for t in range(args.prompt_len, total):
-        tok, cache = serve_step(params, cache, tok, jnp.int32(t))
-        outs.append(np.asarray(tok[:, 0]))
-    t_decode = time.time() - t0
-
-    gen = np.stack(outs, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} gen={args.gen}")
-    print(f"prefill: {t_prefill:.2f}s  decode: {t_decode:.2f}s "
-          f"({t_decode / max(args.gen, 1) * 1000:.0f} ms/token/batch)")
-    print("generated token ids (first 2 rows):")
-    print(gen[:2])
+    for m in sorted({0, exit_idx, M - 1}):
+        t0 = time.time()
+        out = greedy_decode(fam, params, prompt, args.gen, m, args.seq)
+        dt = (time.time() - t0) / args.gen * 1000
+        marker = " <-- --exit" if m == exit_idx else ""
+        print(f"exit {m} ({m + 1}/{M} blocks): {out}  "
+              f"[{dt:.1f} ms/token]{marker}")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,22 @@
-"""Distributed LM training driver over the assigned architectures.
+"""Energy-aware federated LM training over the early-exit transformer
+family (``model_family="transformer"``, docs/FAMILIES.md).
 
-    PYTHONPATH=src python examples/train_lm.py --arch phi3-mini-3.8b --smoke \
-        --steps 20
-    PYTHONPATH=src python examples/train_lm.py --arch xlstm-1.3b --smoke \
-        --steps 50 --fl-pods 4          # DR-FL over pods: layer-masked clients
+The paper's dual-selection workflow on a language task: a fleet of
+battery-powered devices trains the early-exit decoder on the synthetic
+next-token corpus; each round the selector picks WHO participates and
+WHICH depth prefix (Model_1..Model_4) each client trains, and the server
+layer-align aggregates the zero-filled deltas.
 
-``--smoke`` uses the reduced same-family config (CPU-runnable); without it
-you get the full assigned config (sized for the production mesh — pair with
-the dry-run, not a CPU).
+    PYTHONPATH=src python examples/train_lm.py                    # MARL
+    PYTHONPATH=src python examples/train_lm.py --selector greedy \
+        --rounds 12 --devices 16 --ckpt /tmp/lm.msgpack
 
-``--fl-pods N`` demonstrates the paper's technique inside the training loop:
-N simulated clients train depth-prefix submodels (layer masks) and the
-server layer-align aggregates their deltas each round.
+``--ckpt`` saves the final global params for ``examples/serve_lm.py``
+(early-exit greedy decoding from the same tree).
+
+``--local`` skips the fleet and runs plain local DR-FL client updates on
+one simulated device per depth — the smallest possible demo of
+``family.client_update`` + ``aggregate_drfl`` without the engine.
 """
 import argparse
 import sys
@@ -20,100 +25,90 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_pytree
-from repro.configs import TrainConfig, get_config, get_smoke_config
-from repro.core.aggregation import layerwise_aggregate
-from repro.core.layerwise import layer_mask, num_submodels, stacked_update_mask
-from repro.data.synthetic import lm_batches, synthetic_lm_dataset
-from repro.launch.steps import build_train_step
-from repro.models import extra_inputs
-from repro.optim import adamw_init
+from repro.fl import FLConfig, run_simulation
+from repro.fl import server as fl_server
+from repro.models.family import get_family
+
+
+def run_local(args):
+    """Engine-free mini round-loop: one client per depth prefix."""
+    fam = get_family("transformer")
+    x, y = fam.make_dataset(args.n_train, 10, hw=args.seq, noise=1.0,
+                            seed=args.seed)
+    n_val = max(64, args.n_train // 10)
+    x_val, y_val = x[:n_val], y[:n_val]
+    x_tr, y_tr = x[n_val:], y[n_val:]
+    gp = fam.init(jax.random.PRNGKey(args.seed), 10, width_mult=args.width,
+                  hw=args.seq)
+    M = fam.num_submodels()
+    shards = np.array_split(np.arange(len(x_tr)), M)
+    for rnd in range(args.rounds):
+        deltas, idxs, weights, losses = [], [], [], []
+        for m in range(M):
+            sh = shards[m]
+            d, loss = fam.client_update(
+                "drfl", gp, m, x_tr[sh], y_tr[sh], epochs=args.epochs,
+                batch=args.batch, lr=args.lr, seed=args.seed + rnd * M + m)
+            deltas.append(d)
+            idxs.append(m)
+            weights.append(float(len(sh)))
+            losses.append(loss)
+        gp = fl_server.aggregate_drfl(gp, deltas, idxs, weights,
+                                      server_lr=0.7, family=fam)
+        accs = np.asarray(fl_server.evaluate(gp, x_val, y_val, family=fam))
+        print(f"round {rnd:3d} losses={np.round(losses, 3)} "
+              f"exit accs={np.round(accs, 3)}")
+    return gp
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi3-mini-3.8b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--fl-pods", type=int, default=0,
-                    help="simulate N DR-FL clients with layer-wise submodels")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--selector", default="marl",
+                    choices=["marl", "greedy", "random", "static"])
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--participation", type=float, default=0.5)
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seq", type=int, default=8,
+                    help="context window length (cfg.hw)")
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--n-train", type=int, default=1200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--async", dest="engine_async", action="store_true",
+                    help="event-driven async rounds instead of sync barriers")
+    ap.add_argument("--local", action="store_true",
+                    help="engine-free client_update/aggregate demo")
+    ap.add_argument("--ckpt", default=None,
+                    help="save final global params (msgpack) for serve_lm")
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=5,
-                       total_steps=args.steps, loss_chunk=32, remat="none")
-    model, train_step = build_train_step(cfg, tcfg)
-    train_step = jax.jit(train_step, donate_argnums=(0,))
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    state = {"params": params, "opt": adamw_init(params)}
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch={cfg.name} params={n_params:,} "
-          f"(analytic {cfg.param_count():,})")
+    if args.local:
+        gp = run_local(args)
+    else:
+        cfg = FLConfig(
+            n_devices=args.devices, n_rounds=args.rounds,
+            participation=args.participation, local_epochs=args.epochs,
+            batch_size=args.batch, lr=args.lr, n_train=args.n_train,
+            hw=args.seq, width_mult=args.width, seed=args.seed,
+            model_family="transformer", method="drfl",
+            selector=args.selector, energy_scale=0.05,
+            engine_mode="async" if args.engine_async else "sync")
+        t0 = time.time()
+        h = run_simulation(cfg, verbose=True)
+        print(f"\n{cfg.engine_mode} run: {len(h['acc_mean'])} evals in "
+              f"{time.time() - t0:.1f}s wall; final mean exit acc "
+              f"{h['acc_mean'][-1]:.3f}, fleet energy left "
+              f"{h['energy'][-1]:,.0f} J, dropouts {h['dropouts']}")
+        gp = h["params"]
 
-    toks = synthetic_lm_dataset(200_000, cfg.vocab_size, seed=0)
-    it = lm_batches(toks, args.batch, args.seq, seed=0)
-    extras = {k: jnp.zeros(shp, dt) for k, (shp, dt)
-              in extra_inputs(cfg, args.batch, args.seq).items()}
-
-    if args.fl_pods:
-        run_fl(model, cfg, state, it, extras, args)
-        return
-
-    t0 = time.time()
-    for step in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        batch.update(extras)
-        state, metrics = train_step(state, batch)
-        if step % 5 == 0 or step == args.steps - 1:
-            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
-                  f"lr={float(metrics['lr']):.2e} "
-                  f"gnorm={float(metrics['grad_norm']):.2f} "
-                  f"({(time.time() - t0) / (step + 1):.2f}s/step)")
     if args.ckpt:
-        save_pytree(args.ckpt, state["params"])
+        save_pytree(args.ckpt, gp)
         print("saved", args.ckpt)
-
-
-def run_fl(model, cfg, state, it, extras, args):
-    """DR-FL rounds over simulated pods: each client trains a depth-prefix
-    submodel (layer mask), server layer-align aggregates (paper Step 2)."""
-    from repro.launch.steps import chunked_cross_entropy, _unembed
-    M = num_submodels(cfg)
-    print(f"DR-FL mode: {args.fl_pods} clients over {M} layer-wise models")
-
-    def client_loss(params, batch, mask):
-        hidden, _ = model.apply(params, batch["tokens"], {}, layer_mask=mask,
-                                remat="none")
-        return chunked_cross_entropy(hidden, _unembed(model, params),
-                                     batch["labels"], 32)
-
-    grad_fn = jax.jit(jax.value_and_grad(client_loss))
-    gp = state["params"]
-    for rnd in range(args.steps):
-        deltas, masks, weights = [], [], []
-        losses = []
-        for c in range(args.fl_pods):
-            m_idx = c % M
-            mask = layer_mask(cfg, m_idx)
-            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            loss, g = grad_fn(gp, batch, mask)
-            delta = jax.tree.map(lambda x: -args.lr * x, g)
-            deltas.append(delta)
-            masks.append(stacked_update_mask(cfg, m_idx, gp))
-            weights.append(1.0)
-            losses.append(float(loss))
-        gp = layerwise_aggregate(gp, deltas, masks, weights)
-        print(f"round {rnd:3d} client losses="
-              f"{np.round(losses, 3)} (layer-aligned aggregated)")
-    state["params"] = gp
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
 from repro.data.synthetic import (synthetic_image_dataset,
-                                  synthetic_lm_dataset)  # noqa: F401
+                                  synthetic_lm_dataset,
+                                  synthetic_token_dataset)  # noqa: F401
 from repro.data.partition import dirichlet_partition  # noqa: F401
 from repro.data.loader import batch_iterator, epoch_batches  # noqa: F401

@@ -64,6 +64,31 @@ def synthetic_lm_dataset(n_tokens: int, vocab: int, seed: int = 0,
     return out.astype(np.int32)
 
 
+def synthetic_token_dataset(n: int, vocab: int = 10, seq_len: int = 16,
+                            noise: float = 1.0, seed: int = 0
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Next-token prediction framed as classification over ``vocab``:
+    returns (x [n, seq_len] int32 context windows, y [n] int32 next-token
+    labels), windowed lm1b-style (stride 1) from the order-2 Markov stream.
+
+    The label IS the class, so the FL stack's CE loss, per-exit accuracy
+    evaluation and label-based Dirichlet sharding all apply unchanged —
+    this is the corpus :meth:`repro.models.transformer_family
+    .TransformerFamily.make_dataset` serves ``run_simulation`` offline.
+    ``noise`` resamples a fraction (``0.05 * noise``, capped at 0.5) of
+    context tokens uniformly, the difficulty knob mirroring the image
+    set's additive noise."""
+    toks = synthetic_lm_dataset(n + seq_len + 1, vocab, seed=seed)
+    idx = np.arange(n)[:, None] + np.arange(seq_len)[None, :]
+    x = toks[idx].astype(np.int32)
+    y = toks[np.arange(n) + seq_len].astype(np.int32)
+    if noise > 0:
+        rng = np.random.default_rng(seed + 1)
+        flip = rng.random(x.shape) < min(0.5, 0.05 * float(noise))
+        x = np.where(flip, rng.integers(0, vocab, x.shape), x)
+    return x.astype(np.int32), y
+
+
 def lm_batches(tokens: np.ndarray, batch: int, seq_len: int, seed: int = 0):
     """Infinite iterator of {'tokens','labels'} windows."""
     rng = np.random.default_rng(seed)

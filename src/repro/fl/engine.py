@@ -70,7 +70,6 @@ from repro.core.fleet import (FleetState, fleet_charge_jit, fleet_connect,
                               make_fleet_state)
 from repro.core.selection import MarlSelector
 from repro.data.partition import dirichlet_partition
-from repro.data.synthetic import synthetic_image_dataset
 from repro.energy import EnergyScenario, scenario_from_config
 from repro.fl import batch as fl_batch
 from repro.fl import client as fl_client
@@ -147,8 +146,12 @@ def build_world(cfg) -> World:
     """Exact port of the legacy ``_run_once`` setup (shared by the engine
     and the frozen reference loop, so parity starts from identical state)."""
     key = jax.random.PRNGKey(cfg.seed)
-    x, y = synthetic_image_dataset(cfg.n_train, cfg.num_classes, hw=cfg.hw,
-                                   noise=cfg.noise, seed=cfg.seed)
+    family = get_family(getattr(cfg, "model_family", None))
+    # family-routed corpus: image families keep the exact legacy
+    # synthetic_image_dataset call (bit-for-bit), token families serve
+    # [n, seq] context windows through the same (x, y) row contract
+    x, y = family.make_dataset(cfg.n_train, cfg.num_classes, hw=cfg.hw,
+                               noise=cfg.noise, seed=cfg.seed)
     n_val = max(64, int(cfg.n_val_fraction * cfg.n_train))
     x_val, y_val = x[:n_val], y[:n_val]          # server-side validation set
     x_tr, y_tr = x[n_val:], y[n_val:]
@@ -175,7 +178,6 @@ def build_world(cfg) -> World:
         # runtime has a single device)
         from repro.sharding.fleet import maybe_shard_fleet
         fleet = maybe_shard_fleet(fleet, cfg.fleet_mesh)
-    family = get_family(getattr(cfg, "model_family", None))
     global_params = family.init(key, cfg.num_classes,
                                 width_mult=cfg.width_mult, hw=cfg.hw)
     M = family.num_submodels()

@@ -20,7 +20,9 @@ never import a concrete architecture:
 * the registry — ``register_family`` / ``get_family`` / ``resolve_family``.
   ``"cnn"`` (:class:`repro.models.cnn.CnnFamily`) is the registered default;
   ``"mlp"`` (:class:`repro.models.mlp.MlpFamily`) is the early-exit MLP
-  built from :mod:`repro.models.layers`.
+  built from :mod:`repro.models.layers`; ``"transformer"``
+  (:class:`repro.models.transformer_family.TransformerFamily`) is the
+  early-exit decoder trained on the synthetic next-token corpus.
 
 Families are stateful singletons: they own the jitted per-method step
 programs and the mask / stack-template caches, so two call sites asking for
@@ -121,6 +123,20 @@ class ModelFamily:
                          width_mult: float = 1.0) -> float:
         """Analytic forward FLOPs for Model_{idx+1} (energy-model input)."""
         raise NotImplementedError
+
+    # -- data surface ------------------------------------------------------
+    def make_dataset(self, n: int, num_classes: int = 10, hw: int = 32,
+                     noise: float = 1.0, seed: int = 0):
+        """The training corpus this family learns from: ``(x, y)`` numpy
+        arrays whose ROWS the FL stack treats opaquely (Dirichlet shards by
+        label ``y``, row-gathers mini-batches, feeds ``x`` straight to
+        ``apply_all_exits``).  Default: the synthetic class-conditional
+        image set (``x [n, hw, hw, 3]`` float32); token families override
+        with ``[n, seq]`` int32 context windows whose next-token label is
+        the class — ``hw`` doubles as the sequence length there."""
+        from repro.data.synthetic import synthetic_image_dataset
+        return synthetic_image_dataset(n, num_classes, hw=hw, noise=noise,
+                                       seed=seed)
 
     # -- submodel structure ----------------------------------------------
     def submodel_tree(self, tree, model_idx: int):
@@ -468,7 +484,7 @@ def _ensure_builtins():
     _BUILTINS_LOADED = True
     # concrete families self-register at import; imported lazily so the
     # registry module itself stays import-cycle-free
-    from repro.models import cnn, mlp  # noqa: F401
+    from repro.models import cnn, mlp, transformer_family  # noqa: F401
 
 
 def known_families() -> Tuple[str, ...]:

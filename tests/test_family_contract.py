@@ -1,0 +1,398 @@
+"""Family conformance suite (ISSUE 10).
+
+EVERY registered :class:`~repro.models.family.ModelFamily` — cnn, mlp and
+the early-exit transformer — must satisfy the same layer-wise contract
+before the FL stack will treat it as interchangeable:
+
+* layout agreement — ``stack_groups`` / ``stack_template`` /
+  ``update_mask`` / ``held_groups`` describe the SAME ``[stem] + stages
+  + exits`` group decomposition, and ``unstack_groups`` inverts
+  ``stack_groups``;
+* submodel monotonicity — deeper depth prefixes strictly grow in bytes
+  and FLOPs, and ``submodel_tree(params, m)`` holds exactly ``m + 1``
+  stages/exits;
+* engine parity — ``run_simulation`` (sync RoundEngine) matches the
+  frozen reference loop ``_run_once_reference`` bit-for-bit at n=8;
+* executor parity — the bucketed-vmap cohort executor agrees with the
+  per-client path on every delta;
+* cost-model sanity — positive byte sizes, fractions in (0, 1] ending
+  at exactly 1.0, both strictly increasing;
+* property tests (hypothesis) — mask/template invariants hold for
+  arbitrary (m, scale) and arbitrary widths.
+
+Transformer-specific pins live at the bottom: single-compilation across
+all traced depths, Pallas-interpret vs ref-math forward parity, the
+exactly-zero-delta-past-prefix contract, and the frozen n=8 sync/async
+trajectories (``tests/data/frozen_transformer_n8.json``).
+"""
+import json
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, run_simulation
+from repro.fl import batch as fl_batch
+from repro.fl import client as fl_client
+from repro.models.family import get_family, known_families
+
+FAMILIES = sorted(known_families())
+FROZEN_TRANSFORMER = os.path.join(os.path.dirname(__file__), "data",
+                                  "frozen_transformer_n8.json")
+
+# per-family small-but-real init/bench knobs (CPU budget)
+_WIDTH = {"cnn": 0.06, "mlp": 0.25, "transformer": 0.25}
+_HW = 8
+
+
+def _params(name, num_classes=10):
+    fam = get_family(name)
+    return fam.init(jax.random.PRNGKey(0), num_classes,
+                    width_mult=_WIDTH[name], hw=_HW)
+
+
+def _data(name, n=200, seed=0):
+    """The family's OWN corpus — rows are opaque to the FL stack."""
+    return get_family(name).make_dataset(n, 10, hw=_HW, noise=1.0, seed=seed)
+
+
+def _cfg(name, **kw):
+    base = dict(n_devices=6, n_rounds=2, participation=0.5, n_train=400,
+                local_epochs=1, method="drfl", selector="greedy", seed=1,
+                model_family=name, hw=_HW, width_mult=_WIDTH[name],
+                energy_scale=0.05)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# layout agreement: groups / template / masks / held flags
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_group_layout_agreement(name):
+    fam = get_family(name)
+    params = _params(name)
+    M = fam.num_submodels()
+    assert M >= 2
+    assert len(params["stages"]) == M and len(params["exits"]) == M
+
+    groups = fam.stack_groups(params)
+    legacy = [params["stem"]] + list(params["stages"]) + list(params["exits"])
+    assert len(groups) == 1 + 2 * M
+    for g, l in zip(groups, legacy):
+        assert jax.tree.structure(g) == jax.tree.structure(l)
+
+    template = fam.stack_template(params)
+    sizes = tuple(sum(l.size for l in jax.tree.leaves(g)) for g in groups)
+    assert template.group_sizes == sizes
+    assert fam.stack_template(params) is template        # cache hit
+
+    rebuilt = fam.unstack_groups(params, groups)
+    for a, b in zip(jax.tree.leaves(rebuilt), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    for m in range(M):
+        held = fam.held_groups(params, m)
+        stage_held = [i <= m for i in range(M)]
+        assert held == [True] + stage_held + stage_held
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_update_mask_matches_held_groups(name):
+    fam = get_family(name)
+    params = _params(name)
+    for m in range(fam.num_submodels()):
+        mask = fam.update_mask(params, m, scale=1.0)
+        assert jax.tree.structure(mask) == jax.tree.structure(params)
+        held = fam.held_groups(params, m)
+        for g, h in zip(fam.stack_groups(mask), held):
+            for leaf in jax.tree.leaves(g):
+                assert float(leaf) == (1.0 if h else 0.0)
+        assert fam.update_mask(params, m, scale=1.0) is mask    # cache hit
+
+
+# ---------------------------------------------------------------------------
+# submodel monotonicity + cost model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_submodel_monotonicity(name):
+    fam = get_family(name)
+    params = _params(name)
+    M = fam.num_submodels()
+    nbytes, flops = [], []
+    for m in range(M):
+        sub = fam.submodel_tree(params, m)
+        assert len(sub["stages"]) == m + 1 and len(sub["exits"]) == m + 1
+        nbytes.append(sum(l.size * l.dtype.itemsize
+                          for l in jax.tree.leaves(fam._size_tree(params, m))))
+        flops.append(fam.flops_per_sample(m, _HW, _WIDTH[name]))
+    assert all(a < b for a, b in zip(nbytes, nbytes[1:]))
+    assert all(a < b for a, b in zip(flops, flops[1:]))
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_cost_model_positive_and_monotone(name):
+    fam = get_family(name)
+    sizes, fractions = fam.cost_model(10)
+    M = fam.num_submodels()
+    assert len(sizes) == len(fractions) == M
+    assert all(s > 0 for s in sizes)
+    assert all(0.0 < f <= 1.0 for f in fractions)
+    assert fractions[-1] == 1.0
+    assert all(a < b for a, b in zip(sizes, sizes[1:]))
+    assert all(a < b for a, b in zip(fractions, fractions[1:]))
+    assert fam.cost_model(10) == (sizes, fractions)      # cached, stable
+
+
+# ---------------------------------------------------------------------------
+# forward + training semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_truncated_tree_is_a_forward_prefix(name):
+    """Exit i of submodel m equals exit i of the full model (depth-prefix
+    semantics: truncation never changes shallow computation)."""
+    fam = get_family(name)
+    params = _params(name)
+    x, _ = _data(name, n=8)
+    full = fam.apply_all_exits(params, jnp.asarray(x))
+    assert len(full) == fam.num_submodels()
+    assert all(o.shape == (8, 10) for o in full)
+    for m in range(fam.num_submodels()):
+        sub_outs = fam.apply_all_exits(fam.submodel_tree(params, m),
+                                       jnp.asarray(x))
+        assert len(sub_outs) == m + 1
+        for a, b in zip(sub_outs, full):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_drfl_delta_zero_past_prefix(name):
+    """client_update("drfl") returns full-structure deltas that are
+    EXACTLY zero outside the held prefix — the layer-aligned aggregation
+    contract."""
+    fam = get_family(name)
+    params = _params(name)
+    x, y = _data(name, n=64)
+    m = 1
+    delta, loss = fam.client_update("drfl", params, m, x, y, epochs=1,
+                                    batch=32, lr=0.05, seed=7)
+    assert jax.tree.structure(delta) == jax.tree.structure(params)
+    assert np.isfinite(loss)
+    for si in range(fam.num_submodels()):
+        leaves = (jax.tree.leaves(delta["stages"][si])
+                  + jax.tree.leaves(delta["exits"][si]))
+        if si <= m:
+            assert any(np.abs(np.asarray(l)).sum() > 0 for l in leaves)
+        else:
+            for l in leaves:
+                np.testing.assert_array_equal(np.asarray(l), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine parity: sync RoundEngine == frozen reference loop, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_sync_engine_matches_frozen_reference_n8(name):
+    from repro.fl.simulation import _run_once_reference
+    cfg = _cfg(name, n_devices=8, n_rounds=3)
+    h_engine = run_simulation(cfg)
+    h_ref, _, _ = _run_once_reference(cfg)
+    for key in ("acc_mean", "energy", "round_time", "alive", "participants",
+                "model_choices", "reward", "dropouts"):
+        assert h_engine[key] == h_ref[key], key
+    for a, b in zip(h_engine["acc"], h_ref["acc"]):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_run_simulation_async_completes(name):
+    h = run_simulation(_cfg(name, engine_mode="async", n_rounds=3))
+    assert h["engine"] == "async" and h["n_tasks"] > 0
+    assert np.isfinite(h["acc_mean"]).all()
+
+
+# ---------------------------------------------------------------------------
+# executor parity: bucketed vmap(scan) == per-client loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_bucketed_executor_matches_per_client(name):
+    fam = get_family(name)
+    x, y = _data(name, n=200)
+    params = _params(name)
+    parts = [np.arange(0, 40), np.arange(40, 100), np.arange(100, 140)]
+    ids, ms = [0, 1, 2], [0, 1, fam.num_submodels() - 1]
+    seeds = [fl_client.client_update_seed(0, 0, i) for i in ids]
+    res = fl_batch.run_cohort("drfl", params, x, y, parts, ids, ms, seeds,
+                              epochs=1, batch=32, lr=0.05, family=fam)
+    for dev, m, delta, w, loss in res.unstacked():
+        d_ref, l_ref = fam.client_update(
+            "drfl", params, m, x[parts[dev]], y[parts[dev]], epochs=1,
+            batch=32, lr=0.05, seed=seeds[dev])
+        d_ref = fam.submodel_tree(d_ref, m)
+        for a, b in zip(jax.tree.leaves(delta), jax.tree.leaves(d_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-4, rtol=0)
+        assert loss == pytest.approx(l_ref, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# property tests: mask/template invariants
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(name=st.sampled_from(FAMILIES),
+                  m=st.integers(0, 3),
+                  scale=st.floats(0.01, 2.0))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_mask_scale_property(name, m, scale):
+    """Every mask leaf is exactly ``scale`` on held groups, 0 elsewhere,
+    for arbitrary (m, scale); structure always matches the params."""
+    fam = get_family(name)
+    m = min(m, fam.num_submodels() - 1)
+    params = _params(name)
+    mask = fam.update_mask(params, m, scale=scale)
+    assert jax.tree.structure(mask) == jax.tree.structure(params)
+    held = fam.held_groups(params, m)
+    for g, h in zip(fam.stack_groups(mask), held):
+        for leaf in jax.tree.leaves(g):
+            assert float(leaf) == (np.float32(scale) if h else 0.0)
+
+
+@hypothesis.given(name=st.sampled_from(FAMILIES),
+                  widx=st.integers(0, 2), seed=st.integers(0, 99))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_template_tracks_width_property(name, widx, seed):
+    """stack_template group sizes always sum to the tree's leaf count,
+    whatever the init width/key — and group count never changes."""
+    fam = get_family(name)
+    width = (0.06, 0.12, 0.25)[widx] if name == "cnn" else \
+        (0.1, 0.25, 0.5)[widx]
+    params = fam.init(jax.random.PRNGKey(seed), 10, width_mult=width, hw=_HW)
+    template = fam.stack_template(params)
+    assert len(template.group_sizes) == 1 + 2 * fam.num_submodels()
+    assert sum(template.group_sizes) == sum(
+        l.size for l in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# transformer-specific pins
+# ---------------------------------------------------------------------------
+
+
+def test_transformer_single_program_across_depths():
+    """The depth-heterogeneous DR-FL step is ONE compiled program: the
+    held depth is a traced argument, not a static one (the no-retrace
+    ``layer_mask`` idiom — cnn/mlp pay one compile per depth instead)."""
+    fam = get_family("transformer")
+    fam._jit_cache.pop(("step", "drfl"), None)           # fresh program
+    step = fam._step_fn("drfl")
+    params = _params("transformer")
+    x, y = _data("transformer", n=16)
+    for m in range(fam.num_submodels()):
+        step(params, jnp.asarray(x), jnp.asarray(y), m, 0.05)
+    assert step._cache_size() == 1
+
+
+def test_transformer_masked_loss_matches_truncated_loss():
+    """The traced-depth masked joint CE == the truncated-tree ``_drfl_loss``
+    (same weighting, same normalisation) at every depth."""
+    fam = get_family("transformer")
+    params = _params("transformer")
+    x, y = _data("transformer", n=32)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    loss_fn = fam.loss_fn("drfl")
+    for m in range(fam.num_submodels()):
+        masked = fam._masked_drfl_loss(params, x, y, m)
+        truncated = loss_fn(fam.submodel_tree(params, m), x, y)
+        np.testing.assert_allclose(float(masked), float(truncated),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_transformer_kernel_paths_agree():
+    """Pallas ops (interpret mode off-TPU) and the pure-jnp ref math give
+    the same forward — the family may route either way by backend."""
+    from repro.models import transformer_family as tf
+    params = _params("transformer")
+    x, _ = _data("transformer", n=8)
+    x = jnp.asarray(x)
+    with tf.kernel_mode("ref"):
+        ref = [np.asarray(o) for o in tf.apply_all_exits(params, x)]
+    with tf.kernel_mode("pallas"):
+        pal = [np.asarray(o) for o in tf.apply_all_exits(params, x)]
+    for a, b in zip(ref, pal):
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_transformer_kernel_mode_validates():
+    from repro.models import transformer_family as tf
+    with pytest.raises(ValueError, match="kernel_mode"):
+        with tf.kernel_mode("gpu"):
+            pass
+
+
+def test_transformer_token_dataset_contract():
+    """Rows are [seq] int32 context windows, labels are next tokens in
+    [0, vocab) — the classification framing the FL stack requires."""
+    x, y = _data("transformer", n=100)
+    assert x.shape == (100, _HW) and x.dtype == np.int32
+    assert y.shape == (100,) and y.dtype == np.int32
+    assert x.min() >= 0 and x.max() < 10
+    assert y.min() >= 0 and y.max() < 10
+    x2, y2 = _data("transformer", n=100)
+    np.testing.assert_array_equal(x, x2)                 # deterministic
+    np.testing.assert_array_equal(y, y2)
+
+
+def test_transformer_learns_above_chance():
+    """A few local epochs on the order-2 Markov corpus beat 10-way chance
+    at every exit, and deeper exits do better at the end."""
+    fam = get_family("transformer")
+    x, y = fam.make_dataset(1200, 10, hw=_HW, noise=1.0, seed=0)
+    params = fam.init(jax.random.PRNGKey(0), 10, width_mult=0.25, hw=_HW)
+    g = params
+    for ep in range(4):
+        d, _ = fam.client_update("drfl", g, 3, x[200:], y[200:], epochs=1,
+                                 batch=32, lr=0.05, seed=ep)
+        g = jax.tree.map(lambda a, b: a + b, g, d)
+    accs = np.asarray(fam.eval_fn()(g, jnp.asarray(x[:200]),
+                                    jnp.asarray(y[:200])))
+    assert (accs > 0.2).all(), accs
+
+
+def _assert_frozen_transformer(mode):
+    with open(FROZEN_TRANSFORMER) as fh:
+        ref = json.load(fh)
+    cfg = FLConfig(**{**ref["config"], "engine_mode": mode})
+    h = run_simulation(cfg, verbose=False)
+    r = ref[mode]
+    np.testing.assert_array_equal(np.asarray(h["acc_mean"]), r["acc_mean"])
+    np.testing.assert_array_equal(np.asarray(h["energy"]), r["energy"])
+    np.testing.assert_array_equal(np.asarray(h["reward"]), r["reward"])
+    np.testing.assert_array_equal(np.asarray(h["sim_time"]), r["sim_time"])
+    assert [list(p) for p in h["participants"]] == r["participants"]
+    assert [list(m) for m in h["model_choices"]] == r["model_choices"]
+    assert list(h["alive"]) == r["alive"]
+    assert h["dropouts"] == r["dropouts"]
+
+
+def test_transformer_frozen_trajectory_sync():
+    _assert_frozen_transformer("sync")
+
+
+def test_transformer_frozen_trajectory_async():
+    _assert_frozen_transformer("async")
